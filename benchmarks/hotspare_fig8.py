@@ -1,0 +1,26 @@
+"""Fig. 8 reproduction: hot-spare FPGA fallback vs software fallback."""
+from __future__ import annotations
+
+from repro.core.latency import passthrough_model, speedup_vs_sw
+
+FPGA = [1, 35, 50, 100, 150, 200]
+
+
+def run():
+    rows = []
+    m = passthrough_model(60_000, 6)     # the paper's operating point
+    for f in FPGA:
+        s = speedup_vs_sw(m, [0], fallback_speedup=f)
+        rows.append((f"fig8_speedup@fpga={f}x", 0.0, f"{s:.2f}x"))
+    # transmission-bottleneck claim: fpga gains saturate
+    s35 = speedup_vs_sw(m, [0], fallback_speedup=35)
+    s200 = speedup_vs_sw(m, [0], fallback_speedup=200)
+    rows.append(("fig8_saturation_s200_over_s35", 0.0,
+                 f"{s200/s35:.3f}"))
+    # §V-G: a directly-connected hot spare retains ~80% of accel speed
+    big = passthrough_model(600_000, 6)
+    frac = speedup_vs_sw(big, [0], fallback_speedup=200,
+                         direct_fallback=True) / speedup_vs_sw(big)
+    rows.append(("fig8_direct_hotspare_frac_of_full_speed", 0.0,
+                 f"{frac:.2f}"))
+    return rows

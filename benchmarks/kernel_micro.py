@@ -1,0 +1,96 @@
+"""Per-kernel microbenchmarks: SW (XLA) wall time on this host + analytic
+FLOPs; interpret-mode parity error as the 'derived' check column.
+
+(Absolute kernel wall times are CPU-host numbers; the TPU story lives in
+the roofline report.  What matters here: the harness runs, the Viscosity
+contracts hold, and the SW lowering is a real jitted implementation.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.flash_attention.ref import attention_flops
+from repro.kernels.mamba2_scan import ops as ssd_ops
+from repro.kernels.rwkv6_scan import ops as wkv_ops
+from repro.kernels.swiglu import ops as swiglu_ops
+from repro.kernels.swiglu.ref import swiglu_flops
+from repro.kernels.checksum import checksum, checksum_ref
+
+
+def _wall(fn, *args, n=10, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    # attention
+    B, S, H, Hkv, D = 2, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    sw = jax.jit(lambda *a: attn_ops.attention(*a, causal=True, route="sw"))
+    us = _wall(sw, q, k, v)
+    ref = sw(q, k, v)
+    hw = attn_ops.attention(q, k, v, causal=True, route="interpret")
+    err = float(jnp.abs(ref - hw).max())
+    fl = attention_flops(B, S, S, H, D)
+    rows.append((f"attn_sw_B{B}S{S}H{H}", us,
+                 f"gflops={fl/us/1e3:.2f};interp_err={err:.1e}"))
+    # ssd
+    x = jnp.asarray(rng.normal(size=(2, 512, 4, 32)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(2, 512, 4)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, size=(4,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(2, 512, 16)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(2, 512, 16)), jnp.float32)
+    sw = jax.jit(lambda *a: ssd_ops.ssd(*a, route="sw", chunk=64))
+    us = _wall(sw, x, dt, A, Bm, C)
+    err = float(jnp.abs(sw(x, dt, A, Bm, C) -
+                        ssd_ops.ssd(x, dt, A, Bm, C, route="interpret",
+                                    chunk=64)).max())
+    rows.append(("ssd_sw_S512", us, f"interp_err={err:.1e}"))
+    # wkv6
+    r = jnp.asarray(rng.normal(size=(2, 256, 4, 16)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(2, 256, 4, 16)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(2, 256, 4, 16)), jnp.float32)
+    lw = jnp.asarray(-rng.uniform(0.01, 3, size=(2, 256, 4, 16)),
+                     jnp.float32)
+    u = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    sw = jax.jit(lambda *a: wkv_ops.wkv6(*a, route="sw", chunk=16))
+    us = _wall(sw, r, kk, vv, lw, u)
+    err = float(jnp.abs(sw(r, kk, vv, lw, u) -
+                        wkv_ops.wkv6(r, kk, vv, lw, u, route="interpret",
+                                     chunk=16)).max())
+    rows.append(("wkv6_sw_S256", us, f"interp_err={err:.1e}"))
+    # swiglu
+    M, Dm, F = 256, 256, 1024
+    xm = jnp.asarray(rng.normal(size=(M, Dm)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(Dm, F)) * 0.05, jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(Dm, F)) * 0.05, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(F, Dm)) * 0.05, jnp.float32)
+    sw = jax.jit(lambda *a: swiglu_ops.swiglu(*a, route="sw"))
+    us = _wall(sw, xm, w1, w3, w2)
+    err = float(jnp.abs(sw(xm, w1, w3, w2) -
+                        swiglu_ops.swiglu(xm, w1, w3, w2,
+                                          route="interpret")).max())
+    fl = swiglu_flops(M, Dm, F)
+    rows.append((f"swiglu_sw_M{M}F{F}", us,
+                 f"gflops={fl/us/1e3:.2f};interp_err={err:.1e}"))
+    # checksum
+    big = jnp.asarray(rng.normal(size=(1 << 16,)), jnp.float32)
+    sw = jax.jit(checksum_ref)
+    us = _wall(sw, big)
+    same = int(sw(big)) == int(checksum(big, route="interpret"))
+    rows.append(("checksum_sw_64k", us, f"bitexact={same}"))
+    return rows

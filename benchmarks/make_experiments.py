@@ -1,0 +1,62 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+artifacts/dryrun/*.json.  Usage: PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+from __future__ import annotations
+
+import os
+import re
+
+from benchmarks.roofline import fmt_table, load
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_summary() -> str:
+    lines = []
+    for mesh, label in [("single", "single-pod (16x16 = 256 chips)"),
+                        ("multi", "multi-pod (2x16x16 = 512 chips)")]:
+        recs = load(mesh)
+        ok = [r for r in recs if r["status"] == "ok"]
+        skip = [r for r in recs if r["status"] == "skip"]
+        fail = [r for r in recs if r["status"] == "fail"]
+        fits = [r for r in ok if r.get("fits_hbm")]
+        if not recs:
+            lines.append(f"* {label}: (not yet run)")
+            continue
+        lines.append(
+            f"* **{label}**: {len(ok)} cells compile OK "
+            f"({len(fits)} fit <=16 GB/chip), {len(skip)} skipped "
+            f"(long_500k rule), {len(fail)} failed.")
+        over = [r for r in ok if not r.get("fits_hbm")]
+        if over:
+            lines.append("  over-HBM cells: " + ", ".join(
+                f"{r['arch']}/{r['shape']}"
+                f" ({(r['memory']['temp_bytes']+r['memory']['argument_bytes'])/1e9:.0f} GB)"
+                for r in over))
+        comp = [r["compile_s"] for r in ok]
+        if comp:
+            lines.append(f"  compile time: median "
+                         f"{sorted(comp)[len(comp)//2]:.0f}s, "
+                         f"max {max(comp):.0f}s per cell.")
+    return "\n".join(lines)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = re.sub(
+        r"<!-- DRYRUN_SUMMARY -->.*?(?=\n## |\Z)",
+        "<!-- DRYRUN_SUMMARY -->\n" + dryrun_summary() + "\n\n",
+        text, flags=re.S) if "<!-- DRYRUN_SUMMARY -->" in text else text
+    table = fmt_table(load("single"))
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\nMethodology caveats)",
+        "<!-- ROOFLINE_TABLE -->\n" + table + "\n",
+        text, flags=re.S) if "<!-- ROOFLINE_TABLE -->" in text else text
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Fig. 7 reproduction: speedups under two (and more) faults."""
+from __future__ import annotations
+
+from repro.core.latency import passthrough_model, speedup_vs_sw
+
+CASES = [(30_000, 6), (60_000, 6), (120_000, 8), (200_000, 10),
+         (240_000, 12)]
+
+
+def run():
+    rows = []
+    for op, n in CASES:
+        m = passthrough_model(op, n)
+        s1 = speedup_vs_sw(m, [0])
+        s2 = speedup_vs_sw(m, [0, n // 2])
+        rows.append((f"fig7_1fault@op={op}_n={n}", 0.0, f"{s1:.2f}x"))
+        rows.append((f"fig7_2fault@op={op}_n={n}", 0.0, f"{s2:.2f}x"))
+    # the paper's break-even observations
+    m6 = passthrough_model(30_000, 6)
+    rows.append(("fig7_30k_3fault_near_breakeven", 0.0,
+                 f"{speedup_vs_sw(m6, [0, 2, 4]):.2f}x"))
+    m12 = passthrough_model(240_000, 12)
+    rows.append(("fig7_240k_8fault_still_wins", 0.0,
+                 f"{speedup_vs_sw(m12, list(range(8))):.2f}x"))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 6 reproduction: 1-fault speedup vs (stage count x op size)."""
+from __future__ import annotations
+
+from repro.core.latency import passthrough_model, speedup_vs_sw
+
+SIZES = [30_000, 60_000, 120_000, 200_000, 300_000]
+STAGES = [3, 4, 6, 8, 9, 10, 12]
+
+
+def run():
+    rows = []
+    for op in SIZES:
+        for n in STAGES:
+            s = speedup_vs_sw(passthrough_model(op, n), [0])
+            rows.append((f"fig6_speedup@op={op}_n={n}", 0.0, f"{s:.2f}x"))
+    # reported corners
+    rows.append(("fig6_corner_30k_n9_paper3.3", 0.0,
+                 f"{speedup_vs_sw(passthrough_model(30_000, 9), [0]):.2f}x"))
+    rows.append(("fig6_corner_300k_n12_paper9.7", 0.0,
+                 f"{speedup_vs_sw(passthrough_model(300_000, 12), [0]):.2f}x"))
+    return rows

@@ -1,0 +1,81 @@
+"""Roofline report: reads artifacts/dryrun/*.json into the §Roofline table.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+Also exposes run() rows for benchmarks.run (summary stats only).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str = "single", tag: str = "") -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(ART, f"*__{mesh}{tag}.json"))):
+        base = os.path.basename(fn)
+        # skip hillclimb-tagged files when loading baselines
+        if not tag and base.count("__") != 2:
+            continue
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | status | compute_s | memory_s | coll_s | "
+           "dominant | useful/HLO | frac(XLA) | frac(HW) | temp_GB |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']}: "
+                         f"{reason} | | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        tempgb = r["memory"]["temp_bytes"] / 1e9
+        hw = rf.get("hw_route", {}).get("roofline_fraction", float("nan"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['dominant'].split('_')[0]} "
+            f"| {rf['useful_flops_ratio']:.3f} "
+            f"| {rf['roofline_fraction']:.4f} | {hw:.4f} | {tempgb:.1f} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for mesh in ("single", "multi"):
+        recs = load(mesh)
+        ok = [r for r in recs if r["status"] == "ok"]
+        skip = [r for r in recs if r["status"] == "skip"]
+        fail = [r for r in recs if r["status"] == "fail"]
+        rows.append((f"dryrun_{mesh}_cells_ok", 0.0,
+                     f"{len(ok)} ok/{len(skip)} skip/{len(fail)} fail"))
+        if ok:
+            worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+            best = max(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+            rows.append((f"dryrun_{mesh}_best_roofline", 0.0,
+                         f"{best['arch']}/{best['shape']}="
+                         f"{best['roofline']['roofline_fraction']:.3f}"))
+            rows.append((f"dryrun_{mesh}_worst_roofline", 0.0,
+                         f"{worst['arch']}/{worst['shape']}="
+                         f"{worst['roofline']['roofline_fraction']:.4f}"))
+            for dom in ("compute_s", "memory_s", "collective_s"):
+                n = sum(1 for r in ok if r["roofline"]["dominant"] == dom)
+                rows.append((f"dryrun_{mesh}_dominated_by_{dom}", 0.0,
+                             str(n)))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    print(fmt_table(load(args.mesh)))

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (per assignment contract).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.datacenter_fig2",    # Fig. 2 (a,b)
+    "benchmarks.casestudy_fig5",     # Fig. 5 FFT/AES/DCT
+    "benchmarks.passthrough_fig6",   # Fig. 6 stage x size sweep
+    "benchmarks.multifault_fig7",    # Fig. 7 two-fault sweep
+    "benchmarks.hotspare_fig8",      # Fig. 8 FPGA fallback
+    "benchmarks.kernel_micro",       # per-kernel parity + wall
+    "benchmarks.step_bench",         # staged train/serve under faults
+    "benchmarks.roofline",           # dry-run roofline summary
+]
+
+
+def main() -> None:
+    import importlib
+    failures = 0
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run()
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}")
+            print(f"# {modname} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {modname} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""System-level step benchmarks on this host: staged LM train/decode under
+0/1/2 faults + the reconfiguration (recompile) cost — the framework-level
+analogue of the paper's Fig. 5/6 measurement."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.serve import ServeConfig, ServeEngine
+from repro.train import TrainConfig, TrainRunner
+from repro.models import build_model
+
+
+def run():
+    rows = []
+    cfg = get_config("gemma2-2b").reduced()
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, batch=4,
+                                  seq_len=64))
+    r = TrainRunner(cfg, optim.AdamWConfig(), TrainConfig(steps=1), data)
+    params, opt, err = r.init_state()
+    batch = data.device_batch(0)
+
+    def timed_steps(sig, label):
+        t0 = time.perf_counter()
+        fn = r.dispatcher.get(sig)
+        compile_us = (time.perf_counter() - t0) * 1e6
+        # donation-safe fresh copies (the jitted step donates its inputs)
+        pp = jax.tree_util.tree_map(jnp.copy, params)
+        oo = jax.tree_util.tree_map(jnp.copy, opt)
+        ee = jnp.zeros(())
+        pp, oo, ee, m = fn(pp, oo, ee, batch)   # warm
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            pp, oo, ee, m = fn(pp, oo, ee, batch)
+        m["loss"].block_until_ready()
+        step_us = (time.perf_counter() - t0) / n * 1e6
+        rows.append((f"train_step_{label}", step_us,
+                     f"reconfig_us={compile_us:.0f}"))
+        return step_us
+
+    sig0 = r.signature()
+    t_h = timed_steps(sig0, "healthy")
+    sig1 = sig0.with_fault("flash_attention")
+    t_1 = timed_steps(sig1, "1fault")
+    sig2 = sig1.with_fault("swiglu_mlp")
+    t_2 = timed_steps(sig2, "2fault")
+    rows.append(("train_degradation_1fault", 0.0, f"{t_1/t_h:.3f}x"))
+    rows.append(("train_degradation_2fault", 0.0, f"{t_2/t_h:.3f}x"))
+
+    # serving: decode latency + failover cost mid-stream
+    model = build_model(cfg)
+    params_s = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params_s, ServeConfig(max_len=96))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                 cfg.vocab_size).astype(jnp.int32)
+    toks, stats = eng.generate(prompts, 24,
+                               fault_at_step=(12, "flash_attention"))
+    st = stats["step_times"]
+    rows.append(("decode_step_healthy", float(np.median(st[:12]) * 1e6),
+                 "b=4"))
+    rows.append(("decode_failover_spike", float(st[12] * 1e6),
+                 "recompile-on-fault"))
+    rows.append(("decode_step_post_fault", float(np.median(st[13:]) * 1e6),
+                 "sw-routed stage"))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper §II / Fig. 2: data-center fleet simulation CLI.
+
+Run:  PYTHONPATH=src python examples/datacenter_sim.py [--mc]
+"""
+import argparse
+
+from repro.core.datacenter import chips_to_buy, fig2_sweep
+from repro.core.latency import fft_model, throughput_factor
+
+RATES = [1e-2, 1e-3, 1e-4, 1e-5, 1e-6]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mc", action="store_true", help="Monte-Carlo mode")
+    ap.add_argument("--chips", type=int, default=10_000)
+    ap.add_argument("--ticks", type=int, default=1460)
+    args = ap.parse_args()
+
+    deg = tuple(throughput_factor(fft_model(), k) for k in range(3))
+    print(f"VFA degradation curve (FFT case study): "
+          f"{[round(d, 3) for d in deg]}")
+    print(f"{'p/tick':>10} {'SFA repl':>12} {'VFA repl':>12} "
+          f"{'SFA tput':>9} {'VFA tput':>9}")
+    rows = fig2_sweep(RATES, n_chips=args.chips, ticks=args.ticks,
+                      degradation=deg, monte_carlo=args.mc)
+    for p, sr, vr, st, vt in rows:
+        print(f"{p:>10.0e} {sr:>12.1f} {vr:>12.4f} {st:>9.4f} {vt:>9.4f}")
+    print("\nFixed-throughput purchases (100 faulted chips):")
+    for name, r in [("SFA (lose all)", 0.0), ("half perf kept", 0.5),
+                    ("1/3 perf lost", 2 / 3)]:
+        print(f"  {name:>16}: buy {chips_to_buy(100, r):.1f} chips")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Elastic re-shard: train on a (2, 4) mesh, lose a "pod" of devices,
+restore the checkpoint onto a (1, 4) mesh, and continue training.
+
+This script forces 8 host devices, so it must run as its own process:
+    PYTHONPATH=src python examples/elastic_train.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.launch.partition import params_pspecs
+from repro.models import build_model
+
+
+def jit_step(model, ocfg, mesh, params):
+    p_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), params_pspecs(params, mesh))
+    b_sh = {"tokens": NamedSharding(mesh, P("data")),
+            "targets": NamedSharding(mesh, P("data"))}
+
+    def step(params, opt_state, batch):
+        batch = jax.lax.with_sharding_constraint(batch, b_sh)
+        (loss, _), grads = jax.value_and_grad(model.forward,
+                                              has_aux=True)(params, batch)
+        params, opt_state, om = optim.update(ocfg, grads, opt_state, params)
+        return params, opt_state, loss
+
+    # shardings are carried by the arrays themselves (device_put'd by the
+    # caller); jit inherits them — simplest elastic-restore pattern
+    return jax.jit(step), p_sh
+
+
+def main():
+    cfg = get_config("gemma3-1b").reduced()
+    model = build_model(cfg)
+    ocfg = optim.AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=100)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, batch=8,
+                                  seq_len=32))
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt = CheckpointManager(tmp)
+
+        # --- phase 1: full fleet (2 x 4 mesh) ---
+        mesh1 = make_mesh((2, 4), ("data", "model"))
+        with mesh1:
+            params = model.init(jax.random.PRNGKey(0))
+            step1, p_sh1 = jit_step(model, ocfg, mesh1, params)
+            params = jax.device_put(params, p_sh1)
+            opt_state = optim.init(params)   # inherits param shardings
+            losses = []
+            for s in range(10):
+                b = data.device_batch(s)
+                params, opt_state, loss = step1(params, opt_state, b)
+                losses.append(float(loss))
+        ckpt.save(10, {"params": params, "opt": opt_state})
+        print(f"phase 1 (2x4 mesh): loss {losses[0]:.3f} -> {losses[-1]:.3f}"
+              f"; checkpoint saved at step 10")
+
+        # --- phase 2: half the fleet "failed" -> 1 x 4 mesh, resharded ---
+        mesh2 = make_mesh((1, 4), ("data", "model"))
+        with mesh2:
+            like = {"params": params, "opt": opt_state}
+            p_sh2 = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh2, s),
+                params_pspecs(params, mesh2))
+            o_sh2 = optim.AdamWState(
+                count=NamedSharding(mesh2, P()),
+                mu=p_sh2, nu=p_sh2)
+            restored = ckpt.restore(10, like,
+                                    shardings={"params": p_sh2,
+                                               "opt": o_sh2})
+            params2, opt2 = restored["params"], restored["opt"]
+            assert int(opt2.count) == 10   # optimizer state continued
+            step2, _ = jit_step(model, ocfg, mesh2, params2)
+            losses2 = []
+            for s in range(10, 20):
+                b = data.device_batch(s)   # same data stream, replayed
+                params2, opt2, loss = step2(params2, opt2, b)
+                losses2.append(float(loss))
+        print(f"phase 2 (1x4 mesh after pod loss): loss {losses2[0]:.3f} "
+              f"-> {losses2[-1]:.3f}")
+        assert np.isfinite(losses + losses2).all()
+        print("OK: elastic restore onto a smaller mesh (optimizer step "
+              "count preserved), training continued from the checkpoint.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: fault-tolerant LM training end to end.
+
+Trains a reduced gemma2-family model on the synthetic Markov corpus,
+injects a non-transient fault into the attention stage mid-run (step 60),
+and shows the Oobleck response: one reconfiguration (recompile), identical
+loss trajectory, training never stops.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.train import TrainConfig, TrainRunner
+
+
+def main():
+    cfg = get_config("gemma2-2b").reduced()
+    print(f"arch: {cfg.name} ({cfg.num_layers}L d={cfg.d_model})")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, batch=8,
+                                  seq_len=64))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        runner = TrainRunner(
+            cfg,
+            optim.AdamWConfig(lr=1e-2, warmup_steps=10, total_steps=120),
+            TrainConfig(steps=120, ckpt_every=25, ckpt_dir=ckpt_dir,
+                        canary_every=40),
+            data)
+        params, opt, err = runner.init_state()
+
+        def log(step, row):
+            if step % 20 == 0:
+                print(f"  step {step:4d} loss {row['loss']:.4f} "
+                      f"faults={row['n_faults']} "
+                      f"compiles={row['compiles']}")
+            if step == 60:
+                print("  !! non-transient fault detected in "
+                      "'flash_attention' -> quarantining (SW fallback)")
+                runner.inject_fault("flash_attention")
+
+        runner.run(params, opt, err, on_step=log)
+        losses = [h["loss"] for h in runner.history]
+        print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"(decreasing: {np.mean(losses[-10:]) < np.mean(losses[:10])})")
+        print(f"reconfigurations (compiles): {runner.dispatcher.compiles} "
+              "(1 healthy + 1 fault signature)")
+        print(f"fault log: {runner.fault_state.log}")
+        assert runner.dispatcher.compiles == 2
+        assert np.isfinite(losses).all()
+        print("OK: training survived a mid-run stage fault.")
+
+
+if __name__ == "__main__":
+    main()

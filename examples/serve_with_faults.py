@@ -1,0 +1,50 @@
+"""Serving under faults: the paper's functional guarantee, live.
+
+Decodes a batch greedily; at step 8 the attention stage is quarantined.
+The engine recompiles with the SW fallback routed in — and the generated
+tokens are bit-identical to a fault-free run (Viscosity equivalence).
+
+Run:  PYTHONPATH=src python examples/serve_with_faults.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main():
+    cfg = get_config("qwen1.5-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0,
+                                 cfg.vocab_size).astype(jnp.int32)
+
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64))
+    base, _ = eng.generate(prompts, 20)
+
+    eng2 = ServeEngine(cfg, params, ServeConfig(max_len=64))
+    t0 = time.perf_counter()
+    faulted, stats = eng2.generate(prompts, 20,
+                                   fault_at_step=(8, "flash_attention"))
+    dt = time.perf_counter() - t0
+
+    same = bool((base == faulted).all())
+    spike = stats["step_times"][8]
+    steady = float(np.median(stats["step_times"][10:]))
+    print(f"generated 4x20 tokens in {dt:.2f}s")
+    print(f"fault at decode step 8 -> recompiles: {stats['recompiles']}")
+    print(f"failover step: {spike*1e3:.0f}ms (reconfiguration), "
+          f"steady decode: {steady*1e3:.1f}ms")
+    print(f"tokens bit-identical across routings: {same}")
+    assert same and stats["recompiles"] == 1
+    print("OK: serving survived a mid-stream stage fault with identical "
+          "output.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: Oobleck fault-tolerant staged acceleration for JAX (see README)."""

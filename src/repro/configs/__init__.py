@@ -1,0 +1,34 @@
+"""Architecture registry: --arch <id> resolves through here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, SMOKE_SHAPES, ShapeSpec, applicable
+
+_ARCH_MODULES = {
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "qwen1.5-4b": "repro.configs.qwen1p5_4b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "whisper-base": "repro.configs.whisper_base",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1p6b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+__all__ = ["ARCH_NAMES", "SHAPES", "SMOKE_SHAPES", "ModelConfig", "ShapeSpec",
+           "applicable", "get_config"]

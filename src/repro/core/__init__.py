@@ -1,0 +1,10 @@
+"""Oobleck core: staged accelerators, fault routing, latency & fleet models."""
+from repro.core.fault import (FaultInjector, FaultSignature, FaultState,
+                              CanaryChecker, StepGuard, StragglerWatchdog,
+                              inject)
+from repro.core.oobleck import Dispatcher, StagedAccelerator
+from repro.core.stage import Stage
+
+__all__ = ["Stage", "StagedAccelerator", "Dispatcher", "FaultSignature",
+           "FaultState", "FaultInjector", "CanaryChecker", "StepGuard",
+           "StragglerWatchdog", "inject"]

@@ -1,0 +1,150 @@
+"""Data-center fleet models (paper §II, Fig. 2; §V-G cost evaluation).
+
+Fixed-size model: N chips, T ticks, per-tick per-chip fault probability p.
+  * SFA (single-fault accelerator): first fault -> chip replaced.
+  * VFA (variable-fault accelerator): dies after ``max_faults`` faults;
+    intermediate faults multiply chip throughput by the degradation curve
+    (derived from the latency model's throughput_factor, e.g. the FFT case
+    study gives [1.0, 0.38, ...]).
+
+Both a vectorized Monte-Carlo simulation and closed-form expectations are
+provided; Fig. 2's claims are asserted against the analytic curves in
+tests (MC agrees within sampling error).
+
+Fixed-throughput model (§II, §V-G): chips needed to restore the fleet's
+aggregate throughput scale linearly with per-fault performance retention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class FleetResult:
+    replacements: float
+    throughput: float          # mean aggregate throughput / max possible
+    faults_total: float
+
+
+# ------------------------------------------------------------ Monte Carlo
+def simulate_fleet(n_chips: int, ticks: int, p_fault: float, *,
+                   mode: str = "vfa", max_faults: int = 3,
+                   degradation: Sequence[float] = (1.0, 0.38, 0.19),
+                   replace_failed: bool = True, seed: int = 0,
+                   ) -> FleetResult:
+    """Vectorized fleet simulation.
+
+    degradation[k] = relative throughput with k faults (k < max_faults);
+    at ``max_faults`` the chip fails (throughput 0) and is replaced.
+    SFA is the special case max_faults=1.
+    """
+    if mode == "sfa":
+        max_faults = 1
+    rng = np.random.default_rng(seed)
+    deg = np.asarray(list(degradation)[:max_faults], np.float64)
+    assert deg.shape[0] == max_faults
+    faults = np.zeros(n_chips, np.int64)
+    replacements = 0
+    faults_total = 0
+    tp_acc = 0.0
+    for _ in range(ticks):
+        hit = rng.random(n_chips) < p_fault
+        faults_total += int(hit.sum())
+        faults = faults + hit
+        dead = faults >= max_faults
+        n_dead = int(dead.sum())
+        if n_dead and replace_failed:
+            replacements += n_dead
+            faults[dead] = 0
+        elif n_dead:
+            faults[dead] = max_faults  # pin
+        tp_acc += float(deg[np.minimum(faults, max_faults - 1)].sum())
+    return FleetResult(replacements=float(replacements),
+                       throughput=tp_acc / (ticks * n_chips),
+                       faults_total=float(faults_total))
+
+
+# ---------------------------------------------------------------- analytic
+def expected_replacements(n_chips: int, ticks: int, p: float,
+                          max_faults: int = 3) -> float:
+    """Renewal-process expectation of chip replacements over the horizon.
+
+    A chip is replaced each time it accumulates ``max_faults`` faults; fault
+    arrivals are Bernoulli(p) per tick.  Expected replacements per chip =
+    E[floor(Binomial(T, p) / max_faults)] (faults carry across replacement
+    boundaries only within a chip's own renewal chain, which this floor
+    captures exactly for memoryless Bernoulli arrivals).
+    """
+    mean = ticks * p
+    if mean > 50 * max_faults:   # deep-normal regime: floor(X/k) ~ X/k
+        return n_chips * mean / max_faults
+    # exact-ish: sum over Poisson-approximated fault counts
+    from math import exp, lgamma, log
+    lam = -ticks * np.log1p(-p) if p < 1 else float("inf")
+    total = 0.0
+    kmax = int(lam + 12 * np.sqrt(lam) + 3 * max_faults + 10)
+    logp = -lam
+    for k in range(kmax + 1):
+        if k > 0:
+            logp += log(lam) - log(k)
+        total += (k // max_faults) * exp(logp)
+    return n_chips * total
+
+
+def expected_throughput(ticks: int, p: float, *, max_faults: int = 3,
+                        degradation: Sequence[float] = (1.0, 0.38, 0.19),
+                        ) -> float:
+    """Mean relative throughput of one chip over the horizon (replacement
+    resets; Markov chain over fault-count states 0..max_faults-1)."""
+    deg = list(degradation)[:max_faults]
+    state = np.zeros(max_faults)
+    state[0] = 1.0
+    tp = 0.0
+    M = np.zeros((max_faults, max_faults))
+    for i in range(max_faults):
+        M[i, i] += 1 - p
+        j = i + 1
+        M[(j if j < max_faults else 0), i] += p   # overflow -> replaced (new)
+    for _ in range(ticks):
+        tp += float(np.dot(deg, state))
+        state = M @ state
+    return tp / ticks
+
+
+# ------------------------------------------------- fixed-throughput model
+def chips_to_buy(n_faulted: int, retention: float) -> float:
+    """§II: chips bought to restore throughput when ``n_faulted`` chips each
+    retain ``retention`` of their performance.  SFA: retention=0 -> buy all.
+    Linear in (1 - retention), as the paper states."""
+    return n_faulted * (1.0 - retention)
+
+
+def fig2_sweep(fault_rates: Sequence[float], *, n_chips: int = 10_000,
+               ticks: int = 1460, max_faults: int = 3,
+               degradation: Sequence[float] = (1.0, 0.38, 0.19),
+               monte_carlo: bool = False, seed: int = 0):
+    """Reproduces Fig. 2(a,b): returns rows of
+    (rate, sfa_repl, vfa_repl, sfa_tp, vfa_tp)."""
+    rows = []
+    for p in fault_rates:
+        if monte_carlo:
+            sfa = simulate_fleet(n_chips, ticks, p, mode="sfa", seed=seed)
+            vfa = simulate_fleet(n_chips, ticks, p, mode="vfa",
+                                 max_faults=max_faults,
+                                 degradation=degradation, seed=seed)
+            rows.append((p, sfa.replacements, vfa.replacements,
+                         sfa.throughput, vfa.throughput))
+        else:
+            rows.append((
+                p,
+                expected_replacements(n_chips, ticks, p, 1),
+                expected_replacements(n_chips, ticks, p, max_faults),
+                expected_throughput(ticks, p, max_faults=1,
+                                    degradation=(1.0,)),
+                expected_throughput(ticks, p, max_faults=max_faults,
+                                    degradation=degradation),
+            ))
+    return rows

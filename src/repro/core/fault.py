@@ -1,0 +1,194 @@
+"""Fault model, detection, and injection (paper §III-A; detection pluggable).
+
+Fault granularity mirrors the paper: a *non-transient* fault quarantines one
+(stage, replica) — the runtime must stop using the optimized path for that
+stage there.  ``FaultSignature`` is the frozen stage->route map that keys a
+compiled executable (the Cohort 2-bit queue config, lifted to SPMD).
+
+Detectors (any can drive the runtime; "Oobleck does not dictate a
+particular method of fault detection"):
+  * CanaryChecker  — runs each stage's HW path against its SW oracle on
+    deterministic canaries; compares via the Fig.-4 checksum kernel
+    (bit-exact detection of integer/stuck-at faults) or allclose for
+    floating-point contract violations.
+  * StepGuard      — NaN/Inf validity predicates on step outputs.
+  * StragglerWatchdog — robust-quantile step-time outlier detection.
+
+Injection: ``FaultInjector`` corrupts a stage's HW path deterministically
+(bitflip / stuck-at-zero / gain error) to emulate a datapath defect.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.checksum import checksum_tree
+from repro.viscosity.lang import HW, SW
+from repro.core.stage import Stage
+
+OK = "ok"
+FAULT = "fault"
+
+
+@dataclass(frozen=True)
+class FaultSignature:
+    """Frozen stage -> route map. Healthy stages route HW, faulty SW."""
+    routes: Tuple[Tuple[str, str], ...] = ()
+
+    @staticmethod
+    def healthy(stage_names: Sequence[str] = ()) -> "FaultSignature":
+        return FaultSignature(tuple((s, HW) for s in stage_names))
+
+    def as_dict(self) -> Dict[str, str]:
+        return dict(self.routes)
+
+    def with_fault(self, stage: str) -> "FaultSignature":
+        d = self.as_dict()
+        d[stage] = SW
+        return FaultSignature(tuple(sorted(d.items())))
+
+    def faulty(self) -> FrozenSet[str]:
+        return frozenset(s for s, r in self.routes if r != HW)
+
+    def n_faults(self) -> int:
+        return len(self.faulty())
+
+
+class FaultState:
+    """Mutable fleet-side health registry: (stage, replica) -> status."""
+
+    def __init__(self):
+        self._bad: Dict[Tuple[str, int], str] = {}
+        self.log: List[dict] = []
+
+    def mark(self, stage: str, replica: int = 0, kind: str = "detected"):
+        self._bad[(stage, replica)] = FAULT
+        self.log.append({"stage": stage, "replica": replica, "kind": kind,
+                         "t": time.time()})
+
+    def is_faulty(self, stage: str, replica: int = 0) -> bool:
+        return self._bad.get((stage, replica)) == FAULT
+
+    def signature(self, stage_names: Sequence[str], replica: int = 0
+                  ) -> FaultSignature:
+        sig = FaultSignature.healthy(stage_names)
+        for s in stage_names:
+            if self.is_faulty(s, replica):
+                sig = sig.with_fault(s)
+        return sig
+
+    def n_faults(self, replica: int = 0) -> int:
+        return sum(1 for (s, r), v in self._bad.items()
+                   if r == replica and v == FAULT)
+
+
+# ------------------------------------------------------------- injection
+@dataclass
+class FaultInjector:
+    """Wraps a stage's HW path with a deterministic corruption."""
+    kind: str = "bitflip"     # bitflip | stuck_zero | gain
+    magnitude: float = 1e-2
+
+    def corrupt(self, out):
+        def f(x):
+            if not hasattr(x, "dtype") or not jnp.issubdtype(
+                    x.dtype, jnp.inexact):   # floats AND complex
+                return x
+            if self.kind == "stuck_zero":
+                return x.at[..., 0].set(0.0) if x.ndim else x * 0
+            if self.kind == "gain":
+                return x * (1.0 + self.magnitude)
+            # bitflip: flip the sign of one fixed element
+            flat = x.reshape(-1)
+            flat = flat.at[flat.shape[0] // 2].multiply(-1.0)
+            return flat.reshape(x.shape)
+        return jax.tree_util.tree_map(f, out)
+
+    def wrap(self, fn: Callable) -> Callable:
+        def bad(*a, **kw):
+            return self.corrupt(fn(*a, **kw))
+        return bad
+
+
+def inject(stage: Stage, kind: str = "bitflip",
+           magnitude: float = 1e-2) -> Stage:
+    inj = FaultInjector(kind=kind, magnitude=magnitude)
+    return Stage(name=stage.name, spec=None, hw=inj.wrap(stage.hw),
+                 sw=stage.sw, ports=stage.ports, tol=stage.tol)
+
+
+# -------------------------------------------------------------- detectors
+class CanaryChecker:
+    """Per-stage HW-vs-SW canary compare (checksum or allclose)."""
+
+    def __init__(self, stages: Sequence[Stage], *, seed: int = 0,
+                 route_hw: str = HW):
+        self.stages = list(stages)
+        self.seed = seed
+        self.route_hw = route_hw
+
+    def check_stage(self, stage: Stage) -> bool:
+        """True = healthy."""
+        args = stage.canary_inputs(self.seed)
+        try:
+            hw_out = stage.run(*args, route=self.route_hw)
+            sw_out = stage.run(*args, route=SW)
+        except Exception:
+            return False
+        if stage.tol == 0.0:
+            return bool(checksum_tree(hw_out) == checksum_tree(sw_out))
+        ok = True
+        for a, b in zip(jax.tree_util.tree_leaves(hw_out),
+                        jax.tree_util.tree_leaves(sw_out)):
+            ok = ok and bool(jnp.all(jnp.isfinite(a))) and bool(
+                jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                b.astype(jnp.float32))) <= stage.tol)
+        return ok
+
+    def sweep(self, state: FaultState, replica: int = 0) -> List[str]:
+        found = []
+        for s in self.stages:
+            if not self.check_stage(s):
+                state.mark(s.name, replica, kind="canary")
+                found.append(s.name)
+        return found
+
+
+class StepGuard:
+    """NaN/Inf guard over step outputs (loss, grads)."""
+
+    @staticmethod
+    def ok(tree) -> bool:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
+                                                         jnp.floating):
+                if not bool(jnp.all(jnp.isfinite(leaf))):
+                    return False
+        return True
+
+
+class StragglerWatchdog:
+    """Flags replicas whose step time exceeds median * threshold."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 32):
+        self.threshold = threshold
+        self.window = window
+        self.times: Dict[int, List[float]] = {}
+
+    def record(self, replica: int, dt: float):
+        self.times.setdefault(replica, []).append(dt)
+        self.times[replica] = self.times[replica][-self.window:]
+
+    def stragglers(self) -> List[int]:
+        if not self.times:
+            return []
+        med = {r: float(np.median(v)) for r, v in self.times.items()}
+        fleet_med = float(np.median(list(med.values())))
+        if fleet_med <= 0:
+            return []
+        return [r for r, m in med.items() if m > self.threshold * fleet_med]

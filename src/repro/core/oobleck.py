@@ -1,0 +1,110 @@
+"""The Oobleck methodology: staged accelerators + fault routing (paper §III).
+
+``StagedAccelerator`` composes Stages ``f = f_n ∘ … ∘ f_1``.  Two failover
+mechanisms, mirroring the paper:
+
+  * **static routing** (the paper's queue reconfiguration): the executable
+    is compiled for one FaultSignature; a new fault → ``Dispatcher``
+    compiles the re-routed program (LRU-cached — signatures are few and
+    monotone).  Zero overhead in the no-fault fast path (stage boundaries
+    fuse away: the paper's queue *bypass*).
+
+  * **resident routing** (the hot-spare analogue): both lowerings of every
+    stage live in one executable behind ``lax.cond`` on a health-mask
+    input; failover = flipping one bit in an input array (O(µs), no
+    recompile), at the cost of a larger program.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fault import FaultSignature
+from repro.core.stage import Stage
+from repro.viscosity.lang import HW, SW
+
+
+class StagedAccelerator:
+    """f = f_n ∘ … ∘ f_1 with per-stage dual paths."""
+
+    def __init__(self, name: str, stages: Sequence[Stage]):
+        self.name = name
+        self.stages = list(stages)
+        names = [s.name for s in self.stages]
+        assert len(set(names)) == len(names), f"duplicate stages: {names}"
+
+    @property
+    def stage_names(self) -> List[str]:
+        return [s.name for s in self.stages]
+
+    def healthy_signature(self) -> FaultSignature:
+        return FaultSignature.healthy(self.stage_names)
+
+    def run(self, x, signature: Optional[FaultSignature] = None):
+        routes = (signature or self.healthy_signature()).as_dict()
+        for s in self.stages:
+            x = s.run(x, route=routes.get(s.name, HW))
+        return x
+
+    def run_reference(self, x):
+        """All-software oracle (the paper's 'purely software' baseline)."""
+        for s in self.stages:
+            x = s.run(x, route=SW)
+        return x
+
+    def run_resident(self, x, health_mask: jax.Array):
+        """Hot-spare variant: health_mask (n_stages,) bool, traced.
+
+        Both paths are present in the program; ``lax.cond`` selects at
+        runtime — failover without reconfiguration.
+        """
+        for i, s in enumerate(self.stages):
+            x = jax.lax.cond(health_mask[i],
+                             lambda xx, s=s: s.run(xx, route=HW),
+                             lambda xx, s=s: s.run(xx, route=SW),
+                             x)
+        return x
+
+
+@dataclass
+class _Entry:
+    fn: Callable
+    n_calls: int = 0
+
+
+class Dispatcher:
+    """Compile-per-signature cache (the paper's reconfiguration engine).
+
+    ``build(signature) -> callable`` is user-supplied (e.g. jit of a train
+    step with the model rebuilt for those routes).  Reconfiguration cost =
+    one compile, paid once per new signature; monotone fault accumulation
+    keeps the signature set tiny (≤ n_stages + 1 in practice).
+    """
+
+    def __init__(self, build: Callable[[FaultSignature], Callable],
+                 capacity: int = 8):
+        self.build = build
+        self.capacity = capacity
+        self._cache: "collections.OrderedDict[FaultSignature, _Entry]" = \
+            collections.OrderedDict()
+        self.compiles = 0
+
+    def get(self, signature: FaultSignature) -> Callable:
+        if signature in self._cache:
+            self._cache.move_to_end(signature)
+            e = self._cache[signature]
+            e.n_calls += 1
+            return e.fn
+        fn = self.build(signature)
+        self.compiles += 1
+        self._cache[signature] = _Entry(fn=fn, n_calls=1)
+        if len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+        return fn
+
+    def __call__(self, signature: FaultSignature, *args, **kw):
+        return self.get(signature)(*args, **kw)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, stub_frontend_batch
+
+__all__ = ["DataConfig", "SyntheticLM", "stub_frontend_batch"]

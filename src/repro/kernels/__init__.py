@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (the Oobleck "hardware" lowerings) + jnp oracles.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + Viscosity registration), ref.py (pure-jnp oracle / fallback).
+"""

@@ -1,0 +1,6 @@
+from repro.kernels.checksum.ops import CHECKSUM, checksum
+from repro.kernels.checksum.ref import (checksum_ref, checksum_tree,
+                                        popcount_fig4)
+
+__all__ = ["CHECKSUM", "checksum", "checksum_ref", "checksum_tree",
+           "popcount_fig4"]

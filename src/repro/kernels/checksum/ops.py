@@ -1,0 +1,25 @@
+"""Jit'd wrapper + Viscosity registration for the checksum detector."""
+from __future__ import annotations
+
+import functools
+
+from repro import viscosity
+from repro.kernels.checksum import ref as _ref
+from repro.kernels.checksum.kernel import checksum_pallas_words
+
+
+def _hw(x, *, interpret: bool = False):
+    return checksum_pallas_words(_ref.as_words(x), interpret=interpret)
+
+
+CHECKSUM = viscosity.defop(
+    "checksum",
+    ref=_ref.checksum_ref,
+    kernel=_hw,
+    interpret=functools.partial(_hw, interpret=True),
+    tol=0.0,  # bit-exact contract
+)
+
+
+def checksum(x, *, route: str = viscosity.SW, **kw):
+    return CHECKSUM(x, route=route, **kw)

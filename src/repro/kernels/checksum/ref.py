@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the paper's Fig. 4 checksum (popcount) module.
+
+The paper's Viscosity example computes a popcount via the classic
+mask-and-add bit tricks; Oobleck uses checksums to compare hardware and
+software stage outputs cheaply (fault detection canaries).  Here the
+checksum of a tensor is the total popcount of its bit pattern, mod 2^32 —
+bit-exact across lowerings, so a single integer compare detects any
+stuck-at discrepancy between the HW and SW paths on identical inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_UINT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint32}
+
+
+def as_words(x) -> jax.Array:
+    """Flatten any tensor to a uint32 word view of its bit pattern."""
+    x = jnp.asarray(x)
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    nbytes = x.dtype.itemsize
+    u = jax.lax.bitcast_convert_type(x, _UINT.get(nbytes, jnp.uint32))
+    return u.reshape(-1).astype(jnp.uint32)
+
+
+def checksum_ref(x) -> jax.Array:
+    """Total popcount of the bit pattern (uint32)."""
+    w = as_words(x)
+    return jnp.sum(jax.lax.population_count(w).astype(jnp.uint32))
+
+
+def checksum_tree(tree) -> jax.Array:
+    """Checksum of a pytree (order-dependent fold over leaves)."""
+    total = jnp.uint32(0)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total = total * jnp.uint32(1000003) + checksum_ref(leaf)
+    return total
+
+
+def popcount_fig4(x: jax.Array) -> jax.Array:
+    """The paper's Fig. 4 bit-trick sequence on uint32 words (oracle for
+    the kernel body; equals lax.population_count)."""
+    x = x.astype(jnp.uint32)
+    x = (x & 0x55555555) + ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x & 0x0F0F0F0F) + ((x >> 4) & 0x0F0F0F0F)
+    x = (x & 0x00FF00FF) + ((x >> 8) & 0x00FF00FF)
+    x = (x & 0x0000FFFF) + ((x >> 16) & 0x0000FFFF)
+    return x

@@ -1,0 +1,7 @@
+from repro.kernels.flash_attention.ops import ATTENTION, attention
+from repro.kernels.flash_attention.ref import (attention_chunked,
+                                               attention_flops,
+                                               attention_naive)
+
+__all__ = ["ATTENTION", "attention", "attention_chunked", "attention_naive",
+           "attention_flops"]

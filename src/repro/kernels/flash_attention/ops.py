@@ -1,0 +1,74 @@
+"""Jit'd wrapper + Viscosity registration for the attention stage.
+
+``attention(...)`` is the stage entry point used by the models: the route
+argument selects the lowering (paper: per-sub-accelerator queue config):
+  * HW        -> Pallas flash kernel (TPU)
+  * INTERPRET -> same kernel body, interpreter mode (CPU validation)
+  * SW        -> chunked online-softmax jnp fallback (production software)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _pad_to(x, m, axis):
+    s = x.shape[axis]
+    if s % m == 0:
+        return x, s
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - s % m)
+    return jnp.pad(x, pad), s
+
+
+def _kernel_path(q, k, v, *, causal=True, window=0, softcap=0.0, scale=0.0,
+                 q_offset=None, kv_len=None, kv_chunk=0, bq=128, bk=128,
+                 interpret=False):
+    if q_offset is not None or kv_len is not None:
+        # decode-style calls carry dynamic positions; the kernel targets
+        # train/prefill. Fall back to the software lowering (still correct).
+        return _ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                      softcap=softcap, scale=scale,
+                                      q_offset=q_offset, kv_len=kv_len)
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, max(8, Sq))
+    bk = min(bk, max(8, Skv))
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    qt, _ = _pad_to(qt, bq, 2)
+    kt, real_kv = _pad_to(kt, bk, 2)
+    vt, _ = _pad_to(vt, bk, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, scale=scale, kv_len=real_kv,
+                               bq=bq, bk=bk, interpret=interpret)
+    return out[:, :, :Sq, :].transpose(0, 2, 1, 3)
+
+
+def _sw_path(q, k, v, *, kv_chunk=512, bq=128, bk=128, interpret=False,
+             **kw):
+    kv_chunk = kv_chunk or 512
+    return _ref.attention_chunked(q, k, v, kv_chunk=kv_chunk, **kw)
+
+
+ATTENTION = viscosity.defop(
+    "flash_attention",
+    ref=_sw_path,
+    kernel=_kernel_path,
+    interpret=functools.partial(_kernel_path, interpret=True),
+    valid=viscosity.finite_valid,
+    tol=2e-2,
+    flops=lambda q, k, *a, **kw: _ref.attention_flops(
+        q.shape[0], q.shape[1], k.shape[1], q.shape[2], q.shape[3]),
+)
+
+
+def attention(q, k, v, *, route: str = viscosity.SW, **kw):
+    return ATTENTION(q, k, v, route=route, **kw)

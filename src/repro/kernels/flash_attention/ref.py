@@ -1,0 +1,162 @@
+"""Pure-jnp oracles for attention (the Viscosity "software" lowering).
+
+Two implementations:
+  * ``attention_naive`` — the simple masked-softmax oracle used as the
+    ground-truth in tests (never used at scale);
+  * ``attention_chunked`` — the memory-efficient online-softmax jnp version
+    (lax.scan over KV chunks).  This is the production software fallback and
+    the XLA path lowered by the dry-run.
+
+Both support: causal masking, sliding windows (``window > 0``), GQA
+(``Hkv`` divides ``H``), gemma-style logit softcapping, and explicit
+query/key positions (decode: ``q_pos`` is the absolute position of the
+query tokens; ``kv_len`` masks the unwritten tail of a preallocated cache).
+
+Layout: q (B, Sq, H, D); k, v (B, Skv, Hkv, D); output (B, Sq, H, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def _positions(B, S, offset):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if offset is not None:
+        pos = pos + offset.astype(jnp.int32).reshape(-1, 1)
+    return jnp.broadcast_to(pos, (B, S))
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int,
+          kv_len: Optional[jax.Array], explicit_kpos: bool = False):
+    """(B, Sq, Skv) boolean admissibility mask."""
+    m = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    qp = q_pos[:, :, None]
+    kp = k_pos[:, None, :]
+    if causal:
+        m &= kp <= qp
+    if window and window > 0:
+        m &= kp > qp - window
+    if kv_len is not None:
+        m &= kp < kv_len.astype(jnp.int32).reshape(-1, 1, 1)
+    if explicit_kpos:
+        m &= kp >= 0  # ring-buffer slots not yet written carry position -1
+    return m
+
+
+def _repeat_kv(k, H):
+    Hkv = k.shape[2]
+    if Hkv == H:
+        return k
+    assert H % Hkv == 0, (H, Hkv)
+    return jnp.repeat(k, H // Hkv, axis=2)
+
+
+def attention_naive(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float = 0.0,
+                    q_offset: Optional[jax.Array] = None,
+                    kv_len: Optional[jax.Array] = None,
+                    k_positions: Optional[jax.Array] = None) -> jax.Array:
+    """O(Sq*Skv) oracle. Compute in f32, return q.dtype.
+
+    ``k_positions`` (B, Skv): explicit absolute key positions (ring-buffer
+    caches); slots marked -1 are masked out.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    sc = scale or (1.0 / D ** 0.5)
+    # mixed precision: keep K/V in their storage dtype (bf16 caches read
+    # once, no f32 copies) and accumulate the dots in f32 (MXU-native)
+    kf = _repeat_kv(k, H)
+    vf = _repeat_kv(v, H)
+    qf = (q.astype(jnp.float32) * sc).astype(q.dtype)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf,
+                        preferred_element_type=jnp.float32)
+    scores = _softcap(scores, softcap)
+    q_pos = _positions(B, Sq, q_offset)
+    k_pos = (k_positions.astype(jnp.int32) if k_positions is not None
+             else _positions(B, Skv, None))
+    mask = _mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len,
+                 explicit_kpos=k_positions is not None)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vf.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, scale: float = 0.0,
+                      q_offset: Optional[jax.Array] = None,
+                      kv_len: Optional[jax.Array] = None,
+                      kv_chunk: int = 512) -> jax.Array:
+    """Online-softmax over KV chunks: peak activation O(Sq * kv_chunk).
+
+    The production software fallback; equals ``attention_naive`` to f32
+    rounding (tested).  Used by the dry-run as the XLA attention path.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    C = min(kv_chunk, Skv)
+    if Skv % C:  # pad KV to a chunk multiple; padding masked via kv_len
+        pad = C - Skv % C
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = (kv_len if kv_len is not None
+                  else jnp.full((B,), Skv, jnp.int32))
+        Skv = Skv + pad
+    nC = Skv // C
+    sc = scale or (1.0 / D ** 0.5)
+    qf = q.astype(jnp.float32) * sc
+    q_pos = _positions(B, Sq, q_offset)
+
+    kc = _repeat_kv(k, H).reshape(B, nC, C, H, D).transpose(1, 0, 2, 3, 4)
+    vc = _repeat_kv(v, H).reshape(B, nC, C, H, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        ci, kb, vb = xs
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qf.astype(kb.dtype), kb,
+                            preferred_element_type=jnp.float32)
+        scores = _softcap(scores, softcap)
+        k_pos = (ci * C + jnp.arange(C, dtype=jnp.int32))[None, :]
+        k_pos = jnp.broadcast_to(k_pos, (B, C))
+        mask = _mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len)
+        scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new[..., None])
+        l_corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * l_corr + jnp.sum(p, axis=-1)
+        acc = acc * l_corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    ci = jnp.arange(nC, dtype=jnp.int32)
+    # checkpoint the chunk body: backward residuals are then one chunk's
+    # (m, l, acc) carry instead of every chunk's (B,H,Sq,C) score tensors
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (ci, kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_flops(B, Sq, Skv, H, D, causal=True) -> int:
+    """Analytic useful-FLOP model (used by the roofline report)."""
+    frac = 0.5 if (causal and Sq == Skv) else 1.0
+    return int(4 * B * H * Sq * Skv * D * frac)

@@ -1,0 +1,6 @@
+from repro.kernels.mamba2_scan.ops import SSD, ssd
+from repro.kernels.mamba2_scan.ref import (ssd_chunked, ssd_flops,
+                                           ssd_scan_ref, ssd_step)
+
+__all__ = ["SSD", "ssd", "ssd_chunked", "ssd_scan_ref", "ssd_step",
+           "ssd_flops"]

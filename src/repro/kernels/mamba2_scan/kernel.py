@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the chunked Mamba2 SSD scan.
+
+TPU-native design: grid = (B, H, n_chunks) with the chunk axis minor-most;
+the (N, P) SSM state lives in VMEM scratch and persists across sequential
+chunk iterations (the recurrent carry).  All per-chunk work is expressed as
+MXU matmuls on (L, N)/(L, P) tiles:
+
+    CB     = C @ B^T                      (L, L)  MXU
+    y_in   = (CB * decay * mask) @ xdt    (L, L)@(L, P)  MXU
+    y_st   = (C @ state) * exp(cum)       (L, N)@(N, P)  MXU
+    state' = exp(tot) * state + (B*scale)^T @ xdt  (N, L)@(L, P)  MXU
+
+Inputs are pre-scaled outside the kernel: ``xdt = x * dt`` and
+``da = dt * A`` so the kernel touches only dense, layout-friendly operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref, state_scr, *,
+                L: int, N: int, P: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0, :, 0, :].astype(jnp.float32)      # (L, P)
+    da = da_ref[0, :, 0].astype(jnp.float32)           # (L,)
+    b = b_ref[0].astype(jnp.float32)                   # (L, N)
+    c = c_ref[0].astype(jnp.float32)                   # (L, N)
+
+    cum = jnp.cumsum(da)                               # (L,)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    dec = jnp.exp(cum[:, None] - cum[None, :])
+    w = jnp.where(rows >= cols, cb * dec, 0.0)
+    y_intra = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state = state_scr[...]                             # (N, P)
+    y_state = jax.lax.dot_general(c, state, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y = y_intra + y_state * jnp.exp(cum)[:, None]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    tot = cum[L - 1]
+    bscale = b * jnp.exp(tot - cum)[:, None]           # (L, N)
+    upd = jax.lax.dot_general(bscale, xdt, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(tot) + upd
+
+
+def ssd_chunked_pallas(x, dt, A, B_, C, *, chunk: int = 128,
+                       interpret: bool = False):
+    """x (B,S,H,P), dt (B,S,H), A (H,), B_/C (B,S,N) -> y (B,S,H,P).
+
+    S must be a multiple of ``chunk`` (ops wrapper pads).  Final state is
+    not returned by the kernel path (training does not need it; decode uses
+    ``ssd_step``).
+    """
+    Bt, S, H, P = x.shape
+    N = B_.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    da = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]
+
+    kernel = functools.partial(_ssd_kernel, L=L, N=N, P=P)
+    grid = (Bt, H, nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1, L, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, L, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xdt, da, B_, C)
+    return y

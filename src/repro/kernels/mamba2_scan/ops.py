@@ -1,0 +1,44 @@
+"""Jit'd wrapper + Viscosity registration for the Mamba2 SSD stage."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.kernels.mamba2_scan import ref as _ref
+from repro.kernels.mamba2_scan.kernel import ssd_chunked_pallas
+
+
+def _sw(x, dt, A, B_, C, *, chunk: int = 128):
+    y, _ = _ref.ssd_chunked(x, dt, A, B_, C, chunk=chunk)
+    return y
+
+
+def _hw(x, dt, A, B_, C, *, chunk: int = 128, interpret: bool = False):
+    S = x.shape[1]
+    L = min(chunk, S)
+    if S % L:
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_chunked_pallas(x, dt, A, B_, C, chunk=L, interpret=interpret)
+    return y[:, :S]
+
+
+SSD = viscosity.defop(
+    "mamba2_ssd",
+    ref=_sw,
+    kernel=_hw,
+    interpret=functools.partial(_hw, interpret=True),
+    valid=viscosity.finite_valid,
+    tol=2e-2,
+    flops=lambda x, dt, A, B_, C, **kw: _ref.ssd_flops(
+        x.shape[0], x.shape[1], x.shape[2], x.shape[3], B_.shape[-1]),
+)
+
+
+def ssd(x, dt, A, B_, C, *, route: str = viscosity.SW, **kw):
+    return SSD(x, dt, A, B_, C, route=route, **kw)

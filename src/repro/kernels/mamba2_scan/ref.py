@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Mamba2 SSD scan.
+
+Shapes (ngroups = 1):
+  x  (B, S, H, P)   inner activations split into H heads of dim P
+  dt (B, S, H)      positive step sizes (softplus applied upstream)
+  A  (H,)           negative per-head decay
+  B_ (B, S, N)      input projection onto N-dim state
+  C  (B, S, N)      output projection
+  y  (B, S, H, P);  state (B, H, N, P)
+
+Recurrence:  h_t = exp(dt_t A) h_{t-1} + dt_t * (B_t outer x_t)
+             y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, B_, C):
+    """Naive token-by-token scan (oracle)."""
+    Bt, S, H, P = x.shape
+    N = B_.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B_.astype(jnp.float32), C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                    # (B,H,P) (B,H) (B,N) (B,N)
+        decay = jnp.exp(dtt * Af[None, :])       # (B,H)
+        upd = dtt[..., None, None] * bt[:, None, :, None] * xt[:, :, None, :]
+        h = h * decay[..., None, None] + upd     # (B,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hT
+
+
+def ssd_chunked(x, dt, A, B_, C, *, chunk: int = 128):
+    """Chunked SSD (matmul form) — production software path / XLA lowering.
+
+    All decays are exp of non-positive quantities (A<0, dt>0): numerically
+    safe in f32 without log-space tricks.
+    """
+    Bt, S, H, P = x.shape
+    N = B_.shape[-1]
+    L = min(chunk, S)
+    if S % L:
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // L
+
+    xf = x.astype(jnp.float32).reshape(Bt, nc, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nc, L, H)
+    Bf = B_.astype(jnp.float32).reshape(Bt, nc, L, N)
+    Cf = C.astype(jnp.float32).reshape(Bt, nc, L, N)
+    Af = A.astype(jnp.float32)
+    xdt = xf * dtf[..., None]
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(state, inp):
+        xc, bc, cc, dac = inp          # (B,L,H,P) (B,L,N) (B,L,N) (B,L,H)
+        cum = jnp.cumsum(dac, axis=1)                       # (B,L,H)
+        cb = jnp.einsum("bln,bsn->bls", cc, bc)             # (B,L,L)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,L,L,H)
+        w = cb[..., None] * dec * mask[None, :, :, None]
+        y_intra = jnp.einsum("blsh,bshp->blhp", w, xc)
+        y_state = jnp.einsum("bln,bhnp->blhp", cc, state) * \
+            jnp.exp(cum).transpose(0, 1, 2)[..., None]
+        tot = cum[:, -1:, :]                                 # (B,1,H)
+        bscale = jnp.exp(tot - cum)                          # (B,L,H)
+        upd = jnp.einsum("bln,blhp->bhnp", bc[..., :], xc * bscale[..., None])
+        state = state * jnp.exp(tot)[:, 0, :, None, None] + upd
+        return state, y_intra + y_state
+
+    h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    da = dtf * Af[None, None, None, :]
+    xs = (xdt.transpose(1, 0, 2, 3, 4), Bf.transpose(1, 0, 2, 3),
+          Cf.transpose(1, 0, 2, 3), da.transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bt, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), hT
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single decode step. state (B,H,N,P); returns (y_t, state)."""
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])
+    upd = dt_t[..., None, None].astype(jnp.float32) * \
+        B_t[:, None, :, None].astype(jnp.float32) * \
+        x_t[:, :, None, :].astype(jnp.float32)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), state)
+    return y.astype(x_t.dtype), state
+
+
+def ssd_flops(B, S, H, P, N, chunk=128) -> int:
+    L = min(chunk, S)
+    per_chunk = 2 * L * L * N + 2 * L * L * P * H + 4 * L * N * P * H
+    return int(B * (S // max(L, 1)) * per_chunk)

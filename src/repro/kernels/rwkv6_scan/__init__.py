@@ -1,0 +1,6 @@
+from repro.kernels.rwkv6_scan.ops import WKV6, wkv6
+from repro.kernels.rwkv6_scan.ref import (wkv6_chunked, wkv6_flops,
+                                          wkv6_scan_ref, wkv6_step)
+
+__all__ = ["WKV6", "wkv6", "wkv6_chunked", "wkv6_scan_ref", "wkv6_step",
+           "wkv6_flops"]

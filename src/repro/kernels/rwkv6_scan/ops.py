@@ -1,0 +1,42 @@
+"""Jit'd wrapper + Viscosity registration for the RWKV-6 WKV stage."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.kernels.rwkv6_scan import ref as _ref
+from repro.kernels.rwkv6_scan.kernel import wkv6_chunked_pallas
+
+
+def _sw(r, k, v, lw, u, *, chunk: int = 16):
+    o, _ = _ref.wkv6_chunked(r, k, v, lw, u, chunk=chunk)
+    return o
+
+
+def _hw(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = False):
+    S = r.shape[1]
+    L = min(chunk, S)
+    if S % L:
+        pad = L - S % L
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, lw = (jnp.pad(a, pad4) for a in (r, k, v, lw))
+    o = wkv6_chunked_pallas(r, k, v, lw, u, chunk=L, interpret=interpret)
+    return o[:, :S]
+
+
+WKV6 = viscosity.defop(
+    "rwkv6_wkv",
+    ref=_sw,
+    kernel=_hw,
+    interpret=functools.partial(_hw, interpret=True),
+    valid=viscosity.finite_valid,
+    tol=2e-2,
+    flops=lambda r, k, v, *a, **kw: _ref.wkv6_flops(
+        r.shape[0], r.shape[1], r.shape[2], r.shape[3], v.shape[-1]),
+)
+
+
+def wkv6(r, k, v, lw, u, *, route: str = viscosity.SW, **kw):
+    return WKV6(r, k, v, lw, u, route=route, **kw)

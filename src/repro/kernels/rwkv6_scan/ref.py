@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the RWKV-6 "Finch" WKV recurrence.
+
+Shapes: r, k, lw (B, S, H, K); v (B, S, H, V); u (H, K).
+``lw`` is the per-token, per-channel LOG decay (non-positive; the model
+computes lw = -exp(w0 + lora(x)) and clamps to [-4, 0] so the chunked
+factorized form stays inside f32 range for chunk lengths <= 16 — see
+kernel.py for the derivation).
+
+Recurrence (state S: (B, H, K, V)):
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(exp(lw_t)) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan_ref(r, k, v, lw, u):
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    rf, kf = r.astype(jnp.float32), k.astype(jnp.float32)
+    vf, lwf = v.astype(jnp.float32), lw.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(Sst, inp):
+        rt, kt, vt, lwt = inp                        # (B,H,K) .. (B,H,V)
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,K,V)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, Sst + uf[None, :, :, None] * kv)
+        Sst = jnp.exp(lwt)[..., None] * Sst + kv
+        return Sst, o
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), lwf.transpose(1, 0, 2, 3))
+    ST, os = jax.lax.scan(step, S0, xs)
+    return os.transpose(1, 0, 2, 3).astype(r.dtype), ST
+
+
+def wkv6_chunked(r, k, v, lw, u, *, chunk: int = 16):
+    """Chunked factorized WKV (matmul form) — software path / XLA lowering."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    if S % L:
+        pad = L - S % L
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = r.shape[1]
+    nc = Sp // L
+
+    def resh(x):
+        return x.astype(jnp.float32).reshape(B, nc, L, H, -1).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)   # (nc,B,H,L,·)
+    uf = u.astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)           # strict lower
+
+    def body(Sst, inp):
+        rt, kt, vt, lwt = inp                               # (B,H,L,·)
+        la = jnp.cumsum(lwt, axis=2)                        # (B,H,L,K)
+        la_prev = la - lwt                                  # exclusive cumsum
+        qexp = rt * jnp.exp(la_prev)
+        kexp = kt * jnp.exp(-la)
+        scores = jnp.einsum("bhlk,bhsk->bhls", qexp, kexp)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        bonus = jnp.einsum("bhlk,hk,bhlk->bhl", rt, uf, kt)
+        o = jnp.einsum("bhls,bhsv->bhlv", scores, vt) + \
+            jnp.einsum("bhlk,bhkv->bhlv", qexp, Sst) + \
+            bonus[..., None] * vt
+        tot = la[:, :, -1:, :]                              # (B,H,1,K)
+        kscale = kt * jnp.exp(tot - la)
+        Sst = jnp.exp(tot[:, :, 0, :])[..., None] * Sst + \
+            jnp.einsum("bhlk,bhlv->bhkv", kscale, vt)
+        return Sst, o
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    ST, os = jax.lax.scan(body, S0, (rc, kc, vc, lwc))
+    o = os.transpose(1, 0, 3, 2, 4).reshape(B, Sp, H, V)[:, :S]
+    return o.astype(r.dtype), ST
+
+
+def wkv6_step(state, r_t, k_t, v_t, lw_t, u):
+    """Single decode step. state (B,H,K,V)."""
+    kv = k_t[..., :, None].astype(jnp.float32) * \
+        v_t[..., None, :].astype(jnp.float32)
+    o = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                   state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = jnp.exp(lw_t.astype(jnp.float32))[..., None] * state + kv
+    return o.astype(r_t.dtype), state
+
+
+def wkv6_flops(B, S, H, K, V, chunk=16) -> int:
+    L = min(chunk, S)
+    per_chunk = 2 * L * L * K + 2 * L * L * V + 4 * L * K * V
+    return int(B * H * (S // max(L, 1)) * per_chunk)

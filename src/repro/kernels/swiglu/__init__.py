@@ -1,0 +1,4 @@
+from repro.kernels.swiglu.ops import SWIGLU, swiglu
+from repro.kernels.swiglu.ref import swiglu_flops, swiglu_ref
+
+__all__ = ["SWIGLU", "swiglu", "swiglu_ref", "swiglu_flops"]

@@ -1,0 +1,35 @@
+"""Jit'd wrapper + Viscosity registration for the fused gated-MLP stage."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.kernels.swiglu import ref as _ref
+from repro.kernels.swiglu.kernel import swiglu_pallas
+
+
+def _hw(x, w1, w3, w2, *, act: str = "silu", interpret: bool = False):
+    M = x.shape[0]
+    bm = 128 if M % 128 == 0 else (8 if M % 8 == 0 else 1)
+    F = w1.shape[1]
+    bf = 512 if F % 512 == 0 else (128 if F % 128 == 0 else F)
+    return swiglu_pallas(x, w1, w3, w2, act=act, bm=bm, bf=bf,
+                         interpret=interpret)
+
+
+SWIGLU = viscosity.defop(
+    "swiglu_mlp",
+    ref=_ref.swiglu_ref,
+    kernel=_hw,
+    interpret=functools.partial(_hw, interpret=True),
+    valid=viscosity.finite_valid,
+    tol=2e-2,
+    flops=lambda x, w1, *a, **kw: _ref.swiglu_flops(
+        x.shape[0], x.shape[1], w1.shape[1]),
+)
+
+
+def swiglu(x, w1, w3, w2, *, route: str = viscosity.SW, **kw):
+    return SWIGLU(x, w1, w3, w2, route=route, **kw)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused gated-MLP (SwiGLU / GeGLU) stage.
+
+y = act(x @ w1) * (x @ w3) @ w2 ;  x (M, D), w1/w3 (D, F), w2 (F, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(h, act: str):
+    if act == "silu":
+        return jax.nn.silu(h)
+    if act == "gelu":
+        return jax.nn.gelu(h, approximate=True)
+    raise ValueError(act)
+
+
+def swiglu_ref(x, w1, w3, w2, *, act: str = "silu"):
+    xf = x.astype(jnp.float32)
+    h = _act(xf @ w1.astype(jnp.float32), act) * (xf @ w3.astype(jnp.float32))
+    return (h @ w2.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_flops(M, D, F) -> int:
+    return int(6 * M * D * F)

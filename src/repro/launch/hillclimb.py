@@ -1,0 +1,95 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""§Perf hillclimb runner: baseline vs variant roofline comparison.
+
+Usage:
+  python -m repro.launch.hillclimb --arch mixtral-8x7b --shape train_4k \
+      --variant moe_combine_first [--microbatch 8]
+
+Artifacts are tagged ``@<variant>`` next to the baselines; the comparison
+table prints the three roofline terms and the dominant-term delta.
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.launch import dryrun
+from repro.launch.variants import VARIANTS, variant_mesh
+
+
+def run_variant(arch: str, shape: str, variant: str, *, multi_pod=False,
+                microbatch=None, force=False):
+    v = VARIANTS[variant]
+    overrides = dict(v.get("overrides", {}))
+    if v.get("moe_combine_first"):
+        from repro.configs import get_config
+        cfg = get_config(arch)
+        overrides["moe"] = dataclasses.replace(cfg.moe, combine_first=True)
+
+    # monkey-patch the mesh/rules/axes into run_cell via build_lowered
+    orig_build = dryrun.build_lowered
+    orig_mesh = dryrun.make_production_mesh
+
+    def build(arch_, shape_, mesh_, **kw):
+        kw["rules"] = v.get("rules", kw.get("rules"))
+        kw["axes"] = v.get("axes", kw.get("axes"))
+        kw.update(v.get("train_kw", {}))
+        return orig_build(arch_, shape_, mesh_, **kw)
+
+    try:
+        dryrun.build_lowered = build
+        dryrun.make_production_mesh = \
+            lambda *, multi_pod=False: variant_mesh(v, multi_pod)
+        rec = dryrun.run_cell(arch, shape, multi_pod,
+                              microbatch=microbatch or v.get("microbatch"),
+                              overrides=overrides,
+                              force=force, tag=f"@{variant}")
+    finally:
+        dryrun.build_lowered = orig_build
+        dryrun.make_production_mesh = orig_mesh
+    return rec
+
+
+def compare(base, var, label):
+    rows = []
+    for k in ("compute_s", "memory_s", "collective_s"):
+        b = base["roofline"][k]
+        w = var["roofline"][k]
+        rows.append(f"  {k:14s} {b:9.3e} -> {w:9.3e}  "
+                    f"({(w/b - 1)*100 if b else 0:+.1f}%)")
+    bf = base["roofline"]["roofline_fraction"]
+    wf = var["roofline"]["roofline_fraction"]
+    print(f"== {label}")
+    print("\n".join(rows))
+    print(f"  roofline_frac  {bf:.4f} -> {wf:.4f} "
+          f"({(wf/bf if bf else 0):.2f}x)")
+    print(f"  dominant       {base['roofline']['dominant']} -> "
+          f"{var['roofline']['dominant']}")
+    return wf, bf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    base = dryrun.run_cell(args.arch, args.shape, args.multi)
+    if base["status"] != "ok":
+        raise SystemExit(f"baseline not ok: {base}")
+    var = run_variant(args.arch, args.shape, args.variant,
+                      multi_pod=args.multi, microbatch=args.microbatch,
+                      force=args.force)
+    if var["status"] != "ok":
+        print(var.get("error"), "\n", var.get("trace", "")[-2000:])
+        raise SystemExit(1)
+    compare(base, var, f"{args.arch}/{args.shape} + {args.variant}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,392 @@
+"""Trip-count-aware analysis of post-SPMD compiled HLO.
+
+XLA's built-in ``cost_analysis`` visits while (lax.scan) bodies ONCE, which
+undercounts layer-scanned transformers by ~num_layers x (verified in this
+repo's tests).  This module parses ``compiled.as_text()`` — the SPMD
+program, so all shapes are already per-device — and aggregates with loop
+trip counts:
+
+  * FLOPs: dot ops (2 * out_elems * contracted_size); convolutions approx.
+  * HBM traffic proxy: every materializing op's result, write+read (2x) —
+    parameters counted once as reads.  Fusions count only their root
+    (internal values stay in registers/VMEM — the right model for traffic).
+  * Collectives: per-device link-bytes by type (ring algorithms):
+      all-reduce 2*S*(g-1)/g | all-gather / all-to-all S*(g-1)/g
+      reduce-scatter S_out*(g-1) | collective-permute S
+  * While trip counts: max integer constant in the loop condition
+    computation (the scan pattern; validated against known-length scans).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+    r"([\w\-]+)\((.*)$")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_CALLED_RE = re.compile(r"(?:condition|body|to_apply|called_computations)="
+                        r"\{?%?([\w\.\-]+)")
+
+
+def _parse_shape(type_str: str) -> Tuple[int, int]:
+    """-> (elements, bytes) of the first array shape in the type string.
+
+    For tuple types, sums all member arrays.
+    """
+    total_e = total_b = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_e += elems
+        total_b += elems * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+@dataclass
+class Instruction:
+    name: str
+    kind: str
+    type_str: str
+    rest: str
+
+    @property
+    def elems_bytes(self):
+        return _parse_shape(self.type_str)
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    n_coll: Dict[str, int] = field(default_factory=dict)
+    # profiling detail: effective (trip-multiplied) bytes per op kind and
+    # the heaviest individual instructions — drives the §Perf hypotheses
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    top_ops: List[Tuple[float, str]] = field(default_factory=list)
+
+    def merge_scaled(self, sub: "CompStats", scale: float):
+        self.flops += scale * sub.flops
+        self.bytes_hbm += scale * sub.bytes_hbm
+        for k, v in sub.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + scale * v
+        for k, v in sub.n_coll.items():
+            self.n_coll[k] = self.n_coll.get(k, 0) + int(scale * v)
+        for k, v in sub.bytes_by_kind.items():
+            self.bytes_by_kind[k] = self.bytes_by_kind.get(k, 0.0) \
+                + scale * v
+        for b, desc in sub.top_ops:
+            self.top_ops.append((scale * b, desc))
+        self.top_ops = sorted(self.top_ops, reverse=True)[:24]
+
+
+class HLOModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instruction]] = {}
+        self.entry: Optional[str] = None
+        self.shapes: Dict[str, str] = {}          # inst name -> type string
+        self._parse(text)
+
+    def _parse(self, text: str):
+        cur: Optional[List[Instruction]] = None
+        header = re.compile(
+            r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+        for line in text.splitlines():
+            if not line.startswith((" ", "\t", "}")):
+                m = header.match(line)
+                if m and line.rstrip().endswith("{"):
+                    name = m.group(2)
+                    cur = []
+                    self.computations[name] = cur
+                    if m.group(1):
+                        self.entry = name
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            im = _INST_RE.match(line)
+            if not im:
+                continue
+            name, type_str, kind, rest = im.groups()
+            cur.append(Instruction(name, kind, type_str, rest))
+            self.shapes[name] = type_str
+
+    # ---------------------------------------------------------- helpers
+    def _trip_count(self, cond_name: str) -> int:
+        consts = []
+        for inst in self.computations.get(cond_name, []):
+            for m in _CONST_RE.finditer(inst.type_str + " constant" +
+                                        inst.rest if inst.kind == "constant"
+                                        else ""):
+                consts.append(int(m.group(1)))
+            if inst.kind == "constant":
+                m = re.search(r"constant\((\d+)\)", "constant(" + inst.rest)
+                if m and ("s32[]" in inst.type_str or
+                          "u32[]" in inst.type_str):
+                    consts.append(int(m.group(1)))
+        return max(consts) if consts else 1
+
+    def _group_size(self, rest: str, world: int) -> int:
+        m = _GROUPS_IOTA_RE.search(rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(rest)
+        if m:
+            return len(m.group(1).split(","))
+        return world
+
+    def _operand_shape(self, rest: str, idx: int) -> Optional[str]:
+        # operands: "(%a, %b), dims..." -> names; look up recorded types
+        m = re.match(r"([^)]*)\)", rest)
+        if not m:
+            return None
+        ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+        if idx >= len(ops):
+            return None
+        return self.shapes.get(ops[idx])
+
+    def _dus_update_bytes(self, inst: Instruction) -> Optional[int]:
+        """In-place loop writes: a dynamic-update-slice (or a fusion rooted
+        at one) writes only its UPDATE operand, not the whole buffer.
+        Counting the full output per loop iteration overstates HBM traffic
+        by the trip count (verified: 40x for 40-layer residual stacks).
+        Returns the update-operand bytes, or None if not a DUS pattern."""
+        if inst.kind == "dynamic-update-slice":
+            upd = self._operand_shape(inst.rest, 1)
+            if upd:
+                return _parse_shape(upd)[1]
+            return None
+        if inst.kind != "fusion":
+            return None
+        cm = re.search(r"calls=%?([\w\.\-]+)", inst.rest)
+        if not cm or cm.group(1) not in self.computations:
+            return None
+        body = self.computations[cm.group(1)]
+        root = next((i for i in reversed(body)
+                     if i.kind not in ("parameter", "constant")), None)
+        if root is None:
+            return None
+        if root.kind == "dynamic-update-slice":
+            upd = None
+            m = re.match(r"([^)]*)\)", root.rest)
+            if m:
+                ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+                if len(ops) >= 2:
+                    upd = self.shapes.get(ops[1])
+            if upd:
+                # update may itself be a fused computation's value; fall
+                # back to the smallest parameter if lookup fails
+                return _parse_shape(upd)[1]
+            params = [i for i in body if i.kind == "parameter"]
+            if params:
+                return min(_parse_shape(p.type_str)[1] for p in params)
+        if root.kind == "tuple":
+            # multi-output fusion: DUS members count their update operand;
+            # other members count full size
+            members = re.match(r"([^)]*)\)", root.rest)
+            if not members:
+                return None
+            names = [o.strip().lstrip("%")
+                     for o in members.group(1).split(",")]
+            by_name = {i.name: i for i in body}
+            if not any(by_name.get(n) is not None and
+                       by_name[n].kind == "dynamic-update-slice"
+                       for n in names):
+                return None
+            total = 0
+            for n in names:
+                mi = by_name.get(n)
+                if mi is None:
+                    return None
+                if mi.kind == "dynamic-update-slice":
+                    m2 = re.match(r"([^)]*)\)", mi.rest)
+                    ops = [o.strip().lstrip("%")
+                           for o in m2.group(1).split(",")] if m2 else []
+                    upd = self.shapes.get(ops[1]) if len(ops) >= 2 else None
+                    if upd is None:
+                        return None
+                    total += _parse_shape(upd)[1]
+                else:
+                    total += _parse_shape(mi.type_str)[1]
+            return total
+        return None
+
+    # ------------------------------------------------------------ stats
+    _SKIP = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+    _COLL = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "all-reduce-start", "all-gather-start",
+             "collective-permute-start"}
+
+    def stats(self, world: int = 1) -> CompStats:
+        memo: Dict[str, CompStats] = {}
+        assert self.entry, "no ENTRY computation found"
+        return self._comp_stats(self.entry, world, memo)
+
+    def _comp_stats(self, comp: str, world: int,
+                    memo: Dict[str, CompStats]) -> CompStats:
+        if comp in memo:
+            return memo[comp]
+        st = CompStats()
+        memo[comp] = st
+
+        def add_bytes(kind, nbytes, desc):
+            st.bytes_hbm += 2.0 * nbytes
+            st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0.0) \
+                + 2.0 * nbytes
+            st.top_ops.append((2.0 * nbytes, desc))
+
+        for inst in self.computations.get(comp, []):
+            kind = inst.kind
+            if kind == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", inst.rest)
+                bm = re.search(r"body=%?([\w\.\-]+)", inst.rest)
+                cond = cm.group(1) if cm else None
+                body = bm.group(1) if bm else None
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    st.merge_scaled(self._comp_stats(body, world, memo),
+                                    trips)
+                continue
+            if kind in ("conditional", "call", "async-start"):
+                for cname in _CALLED_RE.findall(inst.rest):
+                    if cname in self.computations:
+                        st.merge_scaled(
+                            self._comp_stats(cname, world, memo), 1.0)
+                continue
+            if kind in self._SKIP:
+                continue
+            elems, nbytes = inst.elems_bytes
+            if kind in self._COLL:
+                g = self._group_size(inst.rest, world)
+                base = kind.replace("-start", "")
+                if base == "all-reduce":
+                    link = 2.0 * nbytes * (g - 1) / max(g, 1)
+                elif base in ("all-gather", "all-to-all"):
+                    link = nbytes * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    link = nbytes * (g - 1)
+                else:  # collective-permute
+                    link = float(nbytes)
+                st.coll_bytes[base] = st.coll_bytes.get(base, 0.0) + link
+                st.n_coll[base] = st.n_coll.get(base, 0) + 1
+                add_bytes(base, nbytes,
+                          f"{base} {inst.type_str[:48]} in {comp[:40]}")
+                continue
+            if kind == "dot":
+                lhs = self._operand_shape(inst.rest, 0)
+                contract = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                               inst.rest)
+                if lhs and cm and cm.group(1):
+                    lm = _SHAPE_RE.search(lhs)
+                    if lm and lm.group(2):
+                        dims = [int(x) for x in lm.group(2).split(",")]
+                        for d in cm.group(1).split(","):
+                            di = int(d)
+                            if di < len(dims):
+                                contract *= dims[di]
+                st.flops += 2.0 * elems * contract
+                add_bytes("dot", nbytes,
+                          f"dot {inst.type_str[:48]} in {comp[:40]}")
+                continue
+            if kind == "convolution":
+                st.flops += 2.0 * elems * 64  # coarse; convs are rare here
+                add_bytes("convolution", nbytes, f"conv in {comp[:40]}")
+                continue
+            dus_bytes = self._dus_update_bytes(inst)
+            if dus_bytes is not None:
+                add_bytes("in-place-update", dus_bytes / 2.0,
+                          f"dus-update({dus_bytes/1e6:.0f}MB) "
+                          f"{inst.type_str[:40]} in {comp[:40]}")
+                continue
+            # generic materializing op (fusion root, copy, custom-call, ...)
+            add_bytes(kind if kind in ("fusion", "copy", "custom-call",
+                                       "broadcast",
+                                       "transpose", "reshape", "scatter",
+                                       "gather", "reduce", "select",
+                                       "dynamic-slice", "concatenate")
+                      else "other", nbytes,
+                      f"{kind} {inst.type_str[:48]} in {comp[:40]}")
+        st.top_ops = sorted(st.top_ops, reverse=True)[:24]
+        return st
+
+
+def analyze(compiled_text: str, world: int = 1) -> CompStats:
+    return HLOModule(compiled_text).stats(world)
+
+
+def matched_bytes(module: HLOModule, pred) -> float:
+    """Effective (trip-multiplied) HBM bytes of instructions whose result
+    shape satisfies ``pred(dims: tuple) -> bool``.
+
+    Used by the HW-route roofline: on TPU the Pallas flash kernel keeps the
+    (.., Sq, kv_chunk) score tensors in VMEM, so their XLA-path HBM traffic
+    is subtracted when projecting the kernel route (EXPERIMENTS.md §Perf).
+    """
+    memo: Dict[str, float] = {}
+
+    def comp_bytes(comp: str) -> float:
+        if comp in memo:
+            return memo[comp]
+        memo[comp] = 0.0
+        total = 0.0
+        for inst in module.computations.get(comp, []):
+            if inst.kind == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", inst.rest)
+                bm = re.search(r"body=%?([\w\.\-]+)", inst.rest)
+                trips = module._trip_count(cm.group(1)) if cm else 1
+                if bm:
+                    total += trips * comp_bytes(bm.group(1))
+                continue
+            if inst.kind in ("conditional", "call", "async-start"):
+                for cname in _CALLED_RE.findall(inst.rest):
+                    if cname in module.computations:
+                        total += comp_bytes(cname)
+                continue
+            if inst.kind in HLOModule._SKIP:
+                continue
+            m = _SHAPE_RE.search(inst.type_str)
+            if not m or not m.group(2):
+                continue
+            dims = tuple(int(x) for x in m.group(2).split(","))
+            if pred(dims):
+                _, nbytes = inst.elems_bytes
+                total += 2.0 * nbytes
+        memo[comp] = total
+        return total
+
+    assert module.entry
+    return comp_bytes(module.entry)
+
+
+def score_tensor_bytes(compiled_text: str, attn_chunk: int,
+                       min_rows: int = 1024) -> float:
+    """Attention score/probability tensor traffic in the XLA path."""
+    mod = HLOModule(compiled_text)
+
+    def pred(dims):
+        return (len(dims) >= 2 and dims[-1] == attn_chunk
+                and dims[-2] >= min_rows)
+
+    return matched_bytes(mod, pred)

@@ -1,0 +1,43 @@
+"""Production meshes (assignment spec).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.  Shapes: single pod = (16, 16) ("data","model");
+multi-pod = (2, 16, 16) ("pod","data","model") — 2 pods x 256 chips.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def _mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            " before importing jax (see launch/dryrun.py)")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=devices[:n])
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (tests use small ones, e.g. (2, 4))."""
+    return _mesh(tuple(shape), tuple(axes))
+
+
+# Hardware constants for the roofline (assignment-provided, TPU v5e-class).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

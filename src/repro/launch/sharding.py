@@ -1,0 +1,90 @@
+"""Logical-axis sharding (t5x-style rules), mesh-aware and test-safe.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``).  Inside an ``axis_rules``
+context those names map to mesh axes and become
+``with_sharding_constraint``; outside (CPU smoke tests) it is a no-op.
+
+The rules are the primary perf-iteration control surface: the hillclimbs in
+EXPERIMENTS.md §Perf mostly edit this table, not the model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Baseline rules for the production mesh ("pod" present only multi-pod).
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",     # dropped per-arch when kv % model != 0
+    "kv_seq": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": None,
+    "expert_cap": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+}
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Axis], mesh: Optional[Mesh] = None):
+    prev = (_rules(), _mesh())
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def resolve(*names: Optional[str]) -> P:
+    """Logical names -> PartitionSpec under the active rules."""
+    rules = _rules() or {}
+    mesh = _mesh()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    out = []
+    for n in names:
+        ax = rules.get(n) if n else None
+        if isinstance(ax, tuple) and mesh_axes is not None:
+            ax = tuple(a for a in ax if a in mesh_axes) or None
+            if isinstance(ax, tuple) and len(ax) == 1:
+                ax = ax[0]
+        elif isinstance(ax, str) and mesh_axes is not None and ax not in mesh_axes:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def constrain(x, *names: Optional[str]):
+    """with_sharding_constraint via logical names; no-op without rules."""
+    if _rules() is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, resolve(*names))
+    except Exception:
+        return x  # shape/axis mismatch inside exotic paths: stay unsharded
+
+
+def named_sharding(mesh: Mesh, *names: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, resolve(*names))

@@ -1,0 +1,73 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-aware TrainRunner on a reduced (CPU-runnable) or full
+config.  On real hardware the same entry point runs the full config on the
+production mesh (--mesh data,model); this container is CPU-only, so the
+default is the reduced config on a single device.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro import optim
+from repro.configs import ARCH_NAMES, get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.train import TrainConfig, TrainRunner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b", choices=list(ARCH_NAMES))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (requires accelerator hardware)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--canary-every", type=int, default=50)
+    ap.add_argument("--compression", action="store_true")
+    ap.add_argument("--inject-fault-at", type=int, default=-1)
+    ap.add_argument("--inject-stage", default="flash_attention")
+    ap.add_argument("--hw-route", default="sw",
+                    choices=["hw", "sw", "interpret"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  batch=args.batch, seq_len=args.seq))
+    ocfg = optim.AdamWConfig(lr=args.lr, warmup_steps=20,
+                             total_steps=args.steps)
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir,
+                       canary_every=args.canary_every,
+                       compression=args.compression,
+                       hw_route=args.hw_route)
+    runner = TrainRunner(cfg, ocfg, tcfg, data)
+    params, opt_state, err = runner.init_state()
+
+    def log(step, row):
+        if step % 10 == 0:
+            print(f"step {step:5d} loss {row['loss']:.4f} "
+                  f"gnorm {row['grad_norm']:.2f} dt {row['dt']*1e3:.0f}ms "
+                  f"faults {row['n_faults']} compiles {row['compiles']}",
+                  flush=True)
+        if args.inject_fault_at == step:
+            print(f"!! injecting fault into {args.inject_stage}", flush=True)
+            runner.inject_fault(args.inject_stage)
+
+    runner.run(params, opt_state, err, on_step=log)
+    print(json.dumps({"final_loss": runner.history[-1]["loss"],
+                      "compiles": runner.dispatcher.compiles,
+                      "fault_log": runner.fault_state.log}, default=str))
+
+
+if __name__ == "__main__":
+    main()

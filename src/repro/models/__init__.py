@@ -1,0 +1,6 @@
+from repro.models.model import (build_model, decode_state_specs, input_specs,
+                                params_specs, prefill_batch_specs,
+                                train_batch_specs)
+
+__all__ = ["build_model", "input_specs", "params_specs", "train_batch_specs",
+           "prefill_batch_specs", "decode_state_specs"]

@@ -1,0 +1,174 @@
+"""Decoder blocks: attention+FFN (dense/MoE), RWKV6, Mamba2(+shared attn).
+
+Blocks are assembled by transformer.py inside pattern-grouped scans: the
+repeating layer pattern is unrolled inside the scan body so per-layer
+attributes (window, rope theta, FFN kind) stay *static* — required by the
+Pallas kernels' block-skipping and cheap for compile size (body length =
+pattern length, not num_layers).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import ad_checkpoint
+
+from repro import viscosity
+from repro.configs.base import ATTN_LOCAL, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import mamba2 as mamba_mod
+
+
+@dataclass(frozen=True)
+class LayerMeta:
+    kind: int
+    window: int          # 0 = full attention
+    theta: float         # rope theta for this layer
+    local: bool          # uses the local rope table (gemma3)
+
+
+def make_metas(cfg: ModelConfig):
+    """One LayerMeta per *pattern position* (layer i uses i % len(pattern))."""
+    pat = cfg.layer_pattern or (0,)
+    metas = []
+    for k in pat:
+        local = (k == ATTN_LOCAL) and bool(cfg.rope_theta_local)
+        metas.append(LayerMeta(
+            kind=k,
+            window=cfg.window if k == ATTN_LOCAL else 0,
+            theta=(cfg.rope_theta_local if local else cfg.rope_theta),
+            local=local))
+    return metas
+
+
+# ------------------------------------------------------------------ init
+def init_attn_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    hd = cfg.resolved_head_dim
+    p = {
+        "ln1": L.init_norm(cfg.d_model, dtype, cfg.use_layernorm),
+        "attn": attn_mod.init_attention(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, hd, dtype,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm),
+        "ln2": L.init_norm(cfg.d_model, dtype, cfg.use_layernorm),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.moe.num_experts, dtype,
+                                    shared=cfg.moe.shared_expert)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                              gated=cfg.gated_mlp)
+    if cfg.post_norms:
+        p["post_ln1"] = L.init_norm(cfg.d_model, dtype, cfg.use_layernorm)
+        p["post_ln2"] = L.init_norm(cfg.d_model, dtype, cfg.use_layernorm)
+    return p
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype):
+    k1, _ = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg.d_model, dtype, cfg.use_layernorm),
+        "tm": rwkv_mod.init_rwkv6(k1, cfg, dtype),
+        "ln2": L.init_norm(cfg.d_model, dtype, cfg.use_layernorm),
+    }
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln1": L.init_norm(cfg.d_model, dtype, cfg.use_layernorm),
+        "mix": mamba_mod.init_mamba2(key, cfg, dtype),
+    }
+
+
+# --------------------------------------------------------------- forward
+def attn_block(p, x, cfg: ModelConfig, meta: LayerMeta, ropes, routes,
+               cache=None, t=None, step=False, layer=None):
+    """Returns (x, new_cache, aux) — aux has MoE metrics (zeros if dense)."""
+    route_attn = routes.get("flash_attention", viscosity.SW)
+    route_mlp = routes.get("swiglu_mlp", viscosity.SW)
+    h = L.norm(p["ln1"], x, eps=cfg.norm_eps, layernorm=cfg.use_layernorm)
+    new_cache = cache
+    if step:
+        mrope = None
+        if cfg.mrope_sections:
+            mrope = {"theta": meta.theta, "sections": cfg.mrope_sections}
+        attn_out, new_cache = attn_mod.attn_decode(
+            p["attn"], h, cache, t, n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            window=meta.window, softcap=cfg.attn_softcap,
+            scale=cfg.attn_scale, rope_theta=0.0 if cfg.mrope_sections else meta.theta,
+            mrope=mrope,
+            positions3=(jnp.full((x.shape[0], 1, 3), t, jnp.int32)
+                        if cfg.mrope_sections else None),
+            route=route_attn, layer=layer)
+    else:
+        cos, sin = ropes["local" if meta.local else "global"]
+        res = attn_mod.attn_full(
+            p["attn"], h, cos, sin, n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            causal=True, window=meta.window, softcap=cfg.attn_softcap,
+            scale=cfg.attn_scale, route=route_attn,
+            kv_out=cache is not None, kv_chunk=cfg.attn_chunk)
+        if cache is not None:
+            attn_out, (k, v) = res
+            new_cache = attn_mod.cache_write_prefill(cache, k, v)
+        else:
+            attn_out = res
+    if cfg.post_norms:
+        attn_out = L.norm(p["post_ln1"], attn_out, eps=cfg.norm_eps)
+    # tagged so remat_policy="collectives" keeps the post-all-reduce value
+    attn_out = ad_checkpoint.checkpoint_name(attn_out, "attn_out")
+    x = x + attn_out
+
+    h = L.norm(p["ln2"], x, eps=cfg.norm_eps, layernorm=cfg.use_layernorm)
+    aux = {"aux_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+           "drop_frac": jnp.float32(0)}
+    if cfg.moe is not None:
+        ffn_out, aux = moe_mod.moe_ffn(p["moe"], h, top_k=cfg.moe.top_k,
+                                       capacity_factor=cfg.moe.capacity_factor,
+                                       act=cfg.mlp_act,
+                                       combine_first=cfg.moe.combine_first)
+    else:
+        ffn_out = L.mlp(p["mlp"], h, act=cfg.mlp_act, route=route_mlp)
+    if cfg.post_norms:
+        ffn_out = L.norm(p["post_ln2"], ffn_out, eps=cfg.norm_eps)
+    ffn_out = ad_checkpoint.checkpoint_name(ffn_out, "ffn_out")
+    x = x + ffn_out
+    return x, new_cache, aux
+
+
+def rwkv_block(p, x, cfg: ModelConfig, routes, state=None, step=False):
+    route = routes.get("rwkv6_wkv", viscosity.SW)
+    h = L.norm(p["ln1"], x, eps=cfg.norm_eps)
+    new_state = state
+    if state is not None:
+        tm_out, st_tm = rwkv_mod.time_mix(p["tm"], h, cfg, route=route,
+                                          state=state, step=step)
+    else:
+        tm_out = rwkv_mod.time_mix(p["tm"], h, cfg, route=route)
+    x = x + tm_out
+    h = L.norm(p["ln2"], x, eps=cfg.norm_eps)
+    if state is not None:
+        cm_out, st_cm = rwkv_mod.channel_mix(p["tm"], h, state=state)
+        new_state = {**st_tm, **st_cm}
+    else:
+        cm_out = rwkv_mod.channel_mix(p["tm"], h)
+    x = x + cm_out
+    return x, new_state
+
+
+def mamba_block(p, x, cfg: ModelConfig, routes, state=None, step=False):
+    route = routes.get("mamba2_ssd", viscosity.SW)
+    h = L.norm(p["ln1"], x, eps=cfg.norm_eps)
+    if state is not None:
+        out, new_state = mamba_mod.mamba2_block(p["mix"], h, cfg, route=route,
+                                                state=state, step=step)
+        return x + out, new_state
+    out = mamba_mod.mamba2_block(p["mix"], h, cfg, route=route)
+    return x + out, None

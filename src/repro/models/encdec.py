@@ -1,0 +1,237 @@
+"""Whisper-style encoder-decoder backbone (conv frontend STUBBED).
+
+Per the assignment, [audio] entries specify the transformer backbone only:
+``input_specs()`` provides precomputed frame embeddings (B, S_enc, D) in
+place of the mel/conv frontend.  Encoder: bidirectional attention,
+sinusoidal positions.  Decoder: causal self-attn + cross-attn, learned
+positions, LayerNorm, plain-GELU MLPs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+
+PyTree = Any
+
+
+def _sinusoid(S, D):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, routes: Optional[Dict[str, str]] = None):
+        assert cfg.is_encdec
+        self.cfg = cfg
+        self.routes = dict(routes or {})
+        self.compute_dtype = jnp.dtype(cfg.dtype)
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # ------------------------------------------------------------- init
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        dt = self.param_dtype
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.init_norm(cfg.d_model, dt, True),
+            "attn": attn_mod.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                            cfg.num_kv_heads,
+                                            cfg.resolved_head_dim, dt,
+                                            qkv_bias=True),
+            "ln2": L.init_norm(cfg.d_model, dt, True),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt, gated=False),
+        }
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        dt = self.param_dtype
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": L.init_norm(cfg.d_model, dt, True),
+            "self_attn": attn_mod.init_attention(
+                k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dt, qkv_bias=True),
+            "ln_x": L.init_norm(cfg.d_model, dt, True),
+            "cross_attn": attn_mod.init_attention(
+                k2, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dt, qkv_bias=True),
+            "ln2": L.init_norm(cfg.d_model, dt, True),
+            "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, dt, gated=False),
+        }
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        dt = self.param_dtype
+        ks = jax.random.split(key, 5)
+        enc = jax.vmap(self._init_enc_layer)(
+            jax.random.split(ks[0], cfg.enc_layers))
+        dec = jax.vmap(self._init_dec_layer)(
+            jax.random.split(ks[1], cfg.dec_layers))
+        return {
+            "embed": L.init_embed(ks[2], cfg.vocab_size, cfg.d_model, dt),
+            "dec_pos": (jax.random.normal(ks[3], (cfg.max_target_len,
+                                                  cfg.d_model)) * 0.01
+                        ).astype(dt),
+            "enc": enc,
+            "dec": dec,
+            "enc_norm": L.init_norm(cfg.d_model, dt, True),
+            "dec_norm": L.init_norm(cfg.d_model, dt, True),
+        }
+
+    # ---------------------------------------------------------- encoder
+    def encode(self, params, enc_embeds):
+        cfg = self.cfg
+        x = enc_embeds.astype(self.compute_dtype)
+        S = x.shape[1]
+        x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)[None]
+        route = self.routes.get("flash_attention", viscosity.SW)
+
+        def body(xx, p):
+            h = L.norm(p["ln1"], xx, eps=cfg.norm_eps, layernorm=True)
+            a = attn_mod.attn_full(p["attn"], h, None, None,
+                                   n_heads=cfg.num_heads,
+                                   n_kv=cfg.num_kv_heads,
+                                   head_dim=cfg.resolved_head_dim,
+                                   causal=False, route=route)
+            xx = xx + a
+            h = L.norm(p["ln2"], xx, eps=cfg.norm_eps, layernorm=True)
+            xx = xx + L.mlp(p["mlp"], h, act="gelu_plain")
+            return xx, None
+
+        from repro.models.transformer import remat_wrap
+        x, _ = jax.lax.scan(remat_wrap(cfg, body), x, params["enc"])
+        return L.norm(params["enc_norm"], x, eps=cfg.norm_eps, layernorm=True)
+
+    # ---------------------------------------------------------- decoder
+    def _dec_layer(self, p, x, enc_out, *, cache=None, t=None, step=False,
+                   cross=None):
+        cfg = self.cfg
+        route = self.routes.get("flash_attention", viscosity.SW)
+        h = L.norm(p["ln1"], x, eps=cfg.norm_eps, layernorm=True)
+        new_cache = cache
+        if step:
+            a, new_cache = attn_mod.attn_decode(
+                p["self_attn"], h, cache, t, n_heads=cfg.num_heads,
+                n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                rope_theta=0.0, route=route)
+        else:
+            res = attn_mod.attn_full(p["self_attn"], h, None, None,
+                                     n_heads=cfg.num_heads,
+                                     n_kv=cfg.num_kv_heads,
+                                     head_dim=cfg.resolved_head_dim,
+                                     causal=True, route=route,
+                                     kv_out=cache is not None)
+            if cache is not None:
+                a, (k, v) = res
+                new_cache = attn_mod.cache_write_prefill(cache, k, v)
+            else:
+                a = res
+        x = x + a
+        h = L.norm(p["ln_x"], x, eps=cfg.norm_eps, layernorm=True)
+        # cross attention over encoder output (no positions, bidirectional);
+        # serving passes precomputed per-layer cross-KV (cached at prefill)
+        c = attn_mod.attn_full(p["cross_attn"], h, None, None,
+                               n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                               head_dim=cfg.resolved_head_dim, causal=False,
+                               route=route,
+                               cross_kv=None if cross is not None else enc_out,
+                               precomputed_kv=cross)
+        x = x + c
+        h = L.norm(p["ln2"], x, eps=cfg.norm_eps, layernorm=True)
+        x = x + L.mlp(p["mlp"], h, act="gelu_plain")
+        return x, new_cache
+
+    def cross_kv_cache(self, params, enc_out):
+        """Per-decoder-layer cross-attention K/V, computed once at prefill."""
+        cfg = self.cfg
+
+        def body(_, p):
+            kv = attn_mod.project_kv(p["cross_attn"], enc_out,
+                                     cfg.num_kv_heads, cfg.resolved_head_dim)
+            return None, kv
+
+        _, kvs = jax.lax.scan(body, None, params["dec"])
+        return kvs
+
+    def decode(self, params, enc_out, dec_tokens, *, caches=None, t=None,
+               step=False, cross=None):
+        cfg = self.cfg
+        x = L.embed(params["embed"], dec_tokens,
+                    compute_dtype=self.compute_dtype)
+        if step:
+            pe = jax.lax.dynamic_slice_in_dim(params["dec_pos"], t, 1)
+            x = x + pe[None].astype(x.dtype)
+        else:
+            x = x + params["dec_pos"][None, :x.shape[1]].astype(x.dtype)
+
+        def body(xx, xs):
+            p, c, ckv = xs
+            xx, c2 = self._dec_layer(p, xx, enc_out, cache=c, t=t, step=step,
+                                     cross=ckv)
+            return xx, (c2 if c is not None else jnp.float32(0))
+
+        from repro.models.transformer import remat_wrap
+        body_w = body if (step or caches is not None) else \
+            remat_wrap(cfg, body)
+        (x, new_caches) = jax.lax.scan(
+            body_w, x, (params["dec"], caches, cross))
+        x = L.norm(params["dec_norm"], x, eps=cfg.norm_eps, layernorm=True)
+        return x, (new_caches if caches is not None else None)
+
+    # ------------------------------------------------------------ modes
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["embeds"])
+        h, _ = self.decode(params, enc_out, batch["dec_tokens"])
+        loss, denom = L.chunked_xent(
+            h, batch["dec_targets"], params["embed"]["table"], tied=True,
+            chunk=cfg.loss_chunk, mask=batch.get("loss_mask"))
+        return loss, {"xent": loss, "tokens": denom, "loss": loss}
+
+    def logits_all(self, params, batch) -> jax.Array:
+        enc_out = self.encode(params, batch["embeds"])
+        h, _ = self.decode(params, enc_out, batch["dec_tokens"])
+        return self._logits(params, h)
+
+    def init_cache(self, Bt, max_len):
+        cfg = self.cfg
+        smax = min(max_len, cfg.max_target_len)
+        kv = lambda: attn_mod.init_kv_cache(Bt, smax, cfg.num_kv_heads,
+                                            cfg.resolved_head_dim,
+                                            self.compute_dtype)
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[kv() for _ in range(cfg.dec_layers)])
+
+    def prefill(self, params, batch):
+        """Encode + run decoder prompt; returns (last logits, state).
+
+        state = {"cross": per-layer cross-KV, "self": self-attn caches}.
+        """
+        enc_out = self.encode(params, batch["embeds"])
+        cross = self.cross_kv_cache(params, enc_out)
+        h, caches = self.decode(params, enc_out, batch["dec_tokens"],
+                                caches=batch["cache"], cross=cross)
+        logits = self._logits(params, h[:, -1:])
+        return logits, {"cross": cross, "self": caches}
+
+    def decode_step(self, params, state, tokens, t):
+        h, caches = self.decode(params, None, tokens,
+                                caches=state["self"], t=t, step=True,
+                                cross=state["cross"])
+        logits = self._logits(params, h)
+        return logits, {"cross": state["cross"], "self": caches}
+
+    def _logits(self, params, h):
+        return L.logits_from_embed(params["embed"]["table"], h)

@@ -1,0 +1,151 @@
+"""Shared layers: norms, embeddings, gated MLP (via the SwiGLU stage).
+
+All functions are functional: ``f(params, x, ...)`` with params as nested
+dicts.  Logical-axis sharding constraints are applied through
+``repro.launch.sharding.constrain`` (no-op outside a mesh context).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.kernels.swiglu import ops as swiglu_ops
+from repro.launch.sharding import constrain
+
+
+def _he(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(d, dtype, layernorm=False):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if layernorm:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm(p, x, *, eps=1e-6, layernorm=False):
+    xf = x.astype(jnp.float32)
+    if layernorm:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        xf = xf - mu
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ------------------------------------------------------------ embeddings
+def init_embed(key, vocab, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens, *, scale_by_dim=False, compute_dtype=jnp.bfloat16):
+    x = jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+    if scale_by_dim:
+        x = x * jnp.sqrt(jnp.array(p["table"].shape[1], compute_dtype))
+    return constrain(x, "batch", "seq", "embed")
+
+
+def logits_from_embed(table, x, *, softcap=0.0):
+    out = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    if softcap:
+        out = jnp.tanh(out / softcap) * softcap
+    return constrain(out, "batch", "seq", "vocab")
+
+
+def init_lm_head(key, d, vocab, dtype):
+    return {"w": _he(key, (d, vocab), d, dtype)}
+
+
+def lm_head(p, x, *, softcap=0.0):
+    out = jnp.einsum("...d,dv->...v", x, p["w"].astype(x.dtype))
+    if softcap:
+        out = jnp.tanh(out / softcap) * softcap
+    return constrain(out, "batch", "seq", "vocab")
+
+
+# -------------------------------------------------------------- gated MLP
+def init_mlp(key, d, f, dtype, *, gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w1": _he(k1, (d, f), d, dtype), "w2": _he(k2, (f, d), f, dtype)}
+    if gated:
+        p["w3"] = _he(k3, (d, f), d, dtype)
+    return p
+
+
+def mlp(p, x, *, act="silu", route=viscosity.SW):
+    """Gated MLP through the Viscosity SwiGLU stage; plain MLP otherwise."""
+    if "w3" in p:
+        cd = x.dtype
+        lead = x.shape[:-1]
+        act_name = "gelu" if act in ("gelu", "gelu_plain") else "silu"
+        y = swiglu_ops.swiglu(
+            x.reshape(-1, x.shape[-1]),
+            p["w1"].astype(cd), p["w3"].astype(cd), p["w2"].astype(cd),
+            act=act_name, route=route)
+        y = y.reshape(*lead, -1)
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w1"].astype(x.dtype))
+        h = jax.nn.gelu(h, approximate=True) if act.startswith("gelu") \
+            else jax.nn.silu(h)
+        h = constrain(h, "batch", "seq", "mlp")
+        y = jnp.einsum("...f,fd->...d", h, p["w2"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed")
+
+
+# -------------------------------------------------- chunked cross-entropy
+def chunked_xent(h, targets, table_or_w, *, tied: bool, softcap=0.0,
+                 chunk=512, mask=None):
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    h (B,S,D) final hidden; targets (B,S) int32; returns (mean_loss, denom).
+    """
+    B, S, D = h.shape
+    C = min(chunk, S)
+    if S % C:
+        pad = C - S % C
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    Sp = h.shape[1]
+    nc = Sp // C
+    hc = h.reshape(B, nc, C, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, C).transpose(1, 0, 2)
+    mc = (mask.reshape(B, nc, C).transpose(1, 0, 2) if mask is not None
+          else (tc >= 0))
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hh, tt, mm = xs
+        if tied:
+            logits = jnp.einsum("bcd,vd->bcv", hh,
+                                table_or_w.astype(hh.dtype))
+        else:
+            logits = jnp.einsum("bcd,dv->bcv", hh,
+                                table_or_w.astype(hh.dtype))
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(tt, 0)[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mm.astype(jnp.float32)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mm.astype(jnp.float32))), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0), cnt

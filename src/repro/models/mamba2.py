@@ -1,0 +1,123 @@
+"""Mamba2 (SSD) block: in_proj -> causal depthwise conv -> SSD -> gated out.
+
+The SSD core routes through the Viscosity ``mamba2_ssd`` stage.
+Decode state per layer: conv tail (B, K-1, conv_dim) + SSM state (B,H,N,P).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.kernels.mamba2_scan import ops as ssd_ops
+from repro.kernels.mamba2_scan import ref as ssd_ref
+from repro.launch.sharding import constrain
+from repro.models.layers import _he, rms_norm_simple
+
+
+def dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nheads = d_inner // cfg.ssm.head_dim
+    conv_dim = d_inner + 2 * cfg.ssm.state_dim
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2(key, cfg, dtype):
+    d = cfg.d_model
+    N = cfg.ssm.state_dim
+    d_inner, nheads, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * N + nheads        # z, x, B, C, dt
+    p = {
+        "in_proj": _he(ks[0], (d, proj_out), d, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_kernel, conv_dim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nheads,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(jnp.float32),
+        "out_proj": _he(ks[3], (d_inner, d), d_inner, dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+    return p
+
+
+def _split(cfg, proj):
+    d_inner, nheads, _ = dims(cfg)
+    N = cfg.ssm.state_dim
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, *, tail=None):
+    """Depthwise causal conv along seq. xbc (B,S,C); w (K,C).
+
+    ``tail`` (B, K-1, C): previous tokens (decode); else zero history.
+    Returns (y (B,S,C), new_tail).
+    """
+    B, S, C = xbc.shape
+    K = w.shape[0]
+    hist = tail if tail is not None else jnp.zeros((B, K - 1, C), xbc.dtype)
+    xx = jnp.concatenate([hist.astype(xbc.dtype), xbc], axis=1)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(K):  # K static and tiny (4)
+        y = y + xx[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32)).astype(xbc.dtype)
+    new_tail = xx[:, S:S + K - 1] if S >= K - 1 else xx[:, -(K - 1):]
+    return y, new_tail
+
+
+def mamba2_block(p, x, cfg, *, route=viscosity.SW, state=None, step=False):
+    """x (B,S,D). step=True: single-token decode using/updating ``state``.
+
+    state = {"conv": (B,K-1,conv_dim), "ssm": (B,H,N,P)}.
+    Returns (y, new_state) when state is not None else y.
+    """
+    B, S, D = x.shape
+    d_inner, nheads, conv_dim = dims(cfg)
+    N = cfg.ssm.state_dim
+    P = cfg.ssm.head_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split(cfg, proj)
+    xbc = constrain(xbc, "batch", "seq", "ssm_inner")
+    conv_tail = state["conv"] if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 tail=conv_tail)
+    xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, S, nheads, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    if step:
+        y, new_ssm = ssd_ref.ssd_step(state["ssm"], xs[:, 0], dt[:, 0],
+                                      A, B_[:, 0], C_[:, 0])
+        y = y[:, None]
+    else:
+        y = ssd_ops.ssd(xs, dt, A, B_, C_, route=route, chunk=cfg.ssm.chunk)
+        new_ssm = None
+        if state is not None:  # prefill: also need the final state
+            _, new_ssm = ssd_ref.ssd_chunked(xs, dt, A, B_, C_,
+                                             chunk=cfg.ssm.chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm_simple(y * jax.nn.silu(z), eps=cfg.norm_eps) * \
+        p["norm_scale"].astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    out = constrain(out, "batch", "seq", "embed")
+    if state is not None:
+        return out, {"conv": new_tail, "ssm": new_ssm}
+    return out
+
+
+def init_mamba2_state(B, cfg, dtype):
+    d_inner, nheads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((B, cfg.ssm.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((B, nheads, cfg.ssm.state_dim, cfg.ssm.head_dim),
+                         jnp.float32),
+    }

@@ -1,0 +1,94 @@
+"""Unified model API: build_model(cfg) + input_specs(cfg, shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of
+a given (arch x shape) cell — weak-type-correct, shardable, no device
+allocation — used by the multi-pod dry-run and by jax.eval_shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import LMModel
+
+Model = Union[LMModel, EncDecModel]
+
+
+def build_model(cfg: ModelConfig, routes=None) -> Model:
+    if cfg.is_encdec:
+        return EncDecModel(cfg, routes=routes)
+    return LMModel(cfg, routes=routes)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    if cfg.is_encdec:
+        T = min(cfg.max_target_len, S)
+        return {
+            "embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+            "dec_tokens": _sds((B, T), jnp.int32),
+            "dec_targets": _sds((B, T), jnp.int32),
+        }
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "targets": _sds((B, S), jnp.int32)}
+    if cfg.stub_frontend:  # vlm: precomputed patch embeddings + 3D positions
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["positions3"] = _sds((B, S, 3), jnp.int32)
+        del batch["tokens"]
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, model: Model, B: int, S: int):
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    if cfg.is_encdec:
+        T = min(cfg.max_target_len, S)
+        return {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "dec_tokens": _sds((B, T), jnp.int32),
+                "cache": cache}
+    batch = {"tokens": _sds((B, S), jnp.int32), "cache": cache}
+    if cfg.stub_frontend and not cfg.is_encdec:
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["positions3"] = _sds((B, S, 3), jnp.int32)
+        del batch["tokens"]
+    return batch
+
+
+def decode_state_specs(cfg: ModelConfig, model: Model, B: int, S: int):
+    """Decode-mode stand-ins: (cache/state, tokens, t)."""
+    if cfg.is_encdec:
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+        cross = jax.eval_shape(
+            lambda: model.cross_kv_cache(
+                jax.eval_shape(lambda k: model.init(k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32)),
+                jnp.zeros((B, S, cfg.d_model), jnp.bfloat16)))
+        state = {"cross": cross, "self": cache}
+    else:
+        state = jax.eval_shape(lambda: model.init_cache(B, S))
+    return state, _sds((B, 1), jnp.int32), _sds((), jnp.int32)
+
+
+def params_specs(model: Model):
+    return jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, model: Model = None):
+    """All input stand-ins for one dry-run cell."""
+    model = model or build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, B, S)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, model, B, S)}
+    if shape.kind == "decode":
+        state, tok, t = decode_state_specs(cfg, model, B, S)
+        return {"cache": state, "tokens": tok, "t": t}
+    raise ValueError(shape.kind)

@@ -1,0 +1,137 @@
+"""Capacity-based top-k MoE with group-local gather/scatter dispatch.
+
+Design (scales to the production mesh):
+  * tokens keep their (B, S) grouping; B is the data-sharded axis, so all
+    dispatch indexing is *group-local* — no all-to-all in the baseline.
+  * expert FFN weights are (E, D, F) with F sharded over "model" (TP inside
+    every expert).  The beyond-paper EP variant re-factors the model axis
+    into (expert, tp) — see launch/sharding.py and EXPERIMENTS.md §Perf.
+  * dispatch avoids the O(tokens * E * C) one-hot tensor entirely:
+    positions-within-expert come from a cumsum over the (B, S, E)
+    assignment mask, tokens are gathered into (B, E, C, D) via
+    take_along_axis, and combined back by a (B, S, K) gather.
+
+Losses: switch-style load-balance aux loss + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.layers import _he
+
+
+def init_moe(key, d, f, num_experts, dtype, *, shared=False):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _he(ks[0], (d, num_experts), d, jnp.float32),
+        "w1": _he(ks[1], (num_experts, d, f), d, dtype),
+        "w3": _he(ks[2], (num_experts, d, f), d, dtype),
+        "w2": _he(ks[3], (num_experts, f, d), f, dtype),
+    }
+    if shared:
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"w1": _he(kk[0], (d, f), d, dtype),
+                       "w3": _he(kk[1], (d, f), d, dtype),
+                       "w2": _he(kk[2], (f, d), f, dtype)}
+    return p
+
+
+def moe_ffn(p, x, *, top_k: int, capacity_factor: float, act: str = "silu",
+            combine_first: bool = False) -> Tuple[jax.Array, dict]:
+    """x (B, S, D) -> (y (B, S, D), aux metrics dict).
+
+    ``combine_first`` (§Perf HC-B): gather expert *hidden* states back to
+    token order and fold the gates in BEFORE the second FFN matmul, so the
+    f-contraction (and its TP all-reduce) runs once over (B,S,D) instead
+    of over the (B,E,C,D) capacity buffer — trades extra gather/einsum
+    FLOPs for E/(K*cf) fewer all-reduce bytes.
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    C = int(max(top_k, round(S * top_k * capacity_factor / E)))
+    C = min(C, S * top_k)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # position of token s within expert e's capacity buffer (group-local)
+    assign = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # (B,S,K,E)
+    assign_se = jnp.sum(assign, axis=2)                        # (B,S,E)
+    # priority: earlier tokens first; k-th choice after (k-1)-th
+    cum = jnp.cumsum(assign_se, axis=1) - assign_se            # tokens before s
+    # per-(s,k) position: tokens before s with expert e, plus this token's
+    # earlier choices of the same expert (rare duplicate-expert case)
+    pos_k = jnp.take_along_axis(cum, gate_idx, axis=2)         # (B,S,K)
+    intra = jnp.cumsum(assign, axis=2) - assign                # (B,S,K,E)
+    pos_k = pos_k + jnp.take_along_axis(
+        intra, gate_idx[..., None], axis=3)[..., 0]
+    keep = pos_k < C                                           # capacity drop
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # scatter token indices into (B, E, C) slot table
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None, None]
+    s_idx = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                             (B, S, top_k))
+    slot_tok = jnp.full((B, E, C), S, jnp.int32)               # S = "empty"
+    # dropped tokens write to position C (out of bounds) -> mode="drop"
+    slot_tok = slot_tok.at[
+        b_idx, gate_idx, jnp.where(keep, pos_k, C)
+    ].set(s_idx, mode="drop")
+    # gather tokens -> (B, E, C, D); empty slots read a zero row
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad[:, :, None, :],
+        slot_tok[..., None].reshape(B, E * C, 1, 1), axis=1,
+    ).reshape(B, E, C, D)
+    xe = constrain(xe, "batch", "experts", "expert_cap", "embed")
+
+    h1 = jnp.einsum("becd,edf->becf", xe, p["w1"].astype(xe.dtype))
+    h3 = jnp.einsum("becd,edf->becf", xe, p["w3"].astype(xe.dtype))
+    g = jax.nn.silu(h1) if act == "silu" else jax.nn.gelu(h1, approximate=True)
+    h = constrain(g * h3, "batch", "experts", "expert_cap", "mlp")
+    gidx = (gate_idx * C + jnp.clip(pos_k, 0, C - 1))          # (B,S,K)
+    if combine_first:
+        F = h.shape[-1]
+        hflat = h.reshape(B, E * C, F)
+        hk = jnp.take_along_axis(
+            hflat[:, :, None, :].reshape(B, E * C, 1, F),
+            gidx.reshape(B, S * top_k, 1, 1),
+            axis=1).reshape(B, S, top_k, F)
+        onehot_g = jax.nn.one_hot(gate_idx, E, dtype=hk.dtype) * \
+            gate_vals[..., None].astype(hk.dtype)              # (B,S,K,E)
+        Gm = jnp.einsum("bske,bskf->bsef", onehot_g, hk)
+        y = jnp.einsum("bsef,efd->bsd", Gm, p["w2"].astype(hk.dtype))
+    else:
+        ye = jnp.einsum("becf,efd->becd", h, p["w2"].astype(xe.dtype))
+        ye = constrain(ye, "batch", "experts", "expert_cap", "embed")
+        # combine: for each (s, k), read expert gate_idx at slot pos_k
+        flat = ye.reshape(B, E * C, D)
+        yk = jnp.take_along_axis(
+            flat[:, :, None, :].reshape(B, E * C, 1, D),
+            gidx.reshape(B, S * top_k, 1, 1),
+            axis=1).reshape(B, S, top_k, D)
+        y = jnp.sum(yk * gate_vals[..., None].astype(yk.dtype), axis=2)
+
+    if "shared" in p:
+        sh = p["shared"]
+        h1 = jnp.einsum("bsd,df->bsf", x, sh["w1"].astype(x.dtype))
+        h3 = jnp.einsum("bsd,df->bsf", x, sh["w3"].astype(x.dtype))
+        gg = jax.nn.silu(h1) if act == "silu" else jax.nn.gelu(h1, approximate=True)
+        y = y + jnp.einsum("bsf,fd->bsd", gg * h3, sh["w2"].astype(x.dtype))
+
+    # aux losses (switch-transformer style)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    fe = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    y = constrain(y.astype(x.dtype), "batch", "seq", "embed")
+    return y, {"aux_loss": aux, "z_loss": z, "drop_frac": dropped}

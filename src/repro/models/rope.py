@@ -1,0 +1,58 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions (..., S) int -> cos/sin (..., S, head_dim//2) f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, D); cos/sin (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+def mrope_tables(positions3, head_dim: int, theta: float,
+                 sections: Sequence[int]):
+    """Qwen2-VL M-RoPE: positions3 (B, S, 3) = (t, h, w) coordinates.
+
+    The head_dim/2 frequency channels are partitioned into ``sections``
+    (summing to head_dim/2); section i rotates by coordinate i.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    coords = []
+    start = 0
+    for i, sec in enumerate(sections):
+        coords.append(jnp.broadcast_to(positions3[..., i:i + 1],
+                                       positions3.shape[:-1] + (sec,)))
+        start += sec
+    coord = jnp.concatenate(coords, -1).astype(jnp.float32)   # (B,S,half)
+    ang = coord * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def positions_default(B: int, S: int, offset=None):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if offset is not None:
+        pos = pos + jnp.asarray(offset, jnp.int32).reshape(-1, 1)
+    return jnp.broadcast_to(pos, (B, S))

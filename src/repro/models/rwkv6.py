@@ -1,0 +1,135 @@
+"""RWKV-6 "Finch" block: time-mix (WKV w/ data-dependent decay) + channel-mix.
+
+Faithful pieces: per-channel static token-shift mixes, the LoRA'd
+data-dependent decay (the Finch contribution), bonus ``u``, per-head group
+norm, squared-ReLU channel-mix.  Simplification (documented in DESIGN.md):
+the data-dependent ddlerp on token-shift mixes is reduced to static mixes.
+
+Decay clamp: lw = -exp(...) clamped to [-4, 0] so the chunked factorized
+WKV stays inside f32 range at chunk 16 (see kernels/rwkv6_scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import viscosity
+from repro.kernels.rwkv6_scan import ops as wkv_ops
+from repro.kernels.rwkv6_scan import ref as wkv_ref
+from repro.launch.sharding import constrain
+from repro.models.layers import _he
+
+LW_MIN = -4.0
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    hK = cfg.ssm.rwkv_head_dim
+    H = d // hK
+    lora = cfg.ssm.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    f = cfg.d_ff
+    return {
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": _he(ks[0], (d, d), d, dtype), "wk": _he(ks[1], (d, d), d, dtype),
+        "wv": _he(ks[2], (d, d), d, dtype), "wg": _he(ks[3], (d, d), d, dtype),
+        "wo": _he(ks[4], (d, d), d, dtype),
+        "w0": jnp.zeros((d,), jnp.float32),
+        "w_lora_a": _he(ks[5], (d, lora), d, jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[6], (lora, d)) * 0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (H, hK)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((d,), dtype),
+        # channel-mix
+        "cmix_r": jnp.full((d,), 0.5, dtype), "cmix_k": jnp.full((d,), 0.5, dtype),
+        "cwr": _he(ks[8], (d, d), d, dtype),
+        "cwk": _he(ks[9], (d, f), d, dtype),
+        "cwv": _he(ks[10], (f, d), f, dtype),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / ``last`` for t=0). x (B,S,D)."""
+    if x.shape[1] == 1 and last is not None:
+        return last[:, None, :]
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, m):
+    return x + (xs - x) * m.astype(x.dtype)
+
+
+def time_mix(p, x, cfg, *, route=viscosity.SW, state=None, step=False):
+    B, S, d = x.shape
+    hK = cfg.ssm.rwkv_head_dim
+    H = d // hK
+    last = state["shift_tm"] if state is not None else None
+    xs = _shift(x, last)
+    r = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_r"]), p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_k"]), p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_v"]), p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_g"]), p["wg"].astype(x.dtype))
+    xw = _mix(x, xs, p["mix_w"]).astype(jnp.float32)
+    lw = -jnp.exp(p["w0"][None, None] +
+                  jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"])
+    lw = jnp.clip(lw, LW_MIN, -1e-4)
+
+    rh = r.reshape(B, S, H, hK)
+    kh = k.reshape(B, S, H, hK)
+    vh = v.reshape(B, S, H, hK)
+    lwh = lw.reshape(B, S, H, hK).astype(x.dtype)
+    rh = constrain(rh, "batch", "seq", "ssm_heads", "head_dim")
+
+    if step:
+        o, new_wkv = wkv_ref.wkv6_step(state["wkv"], rh[:, 0], kh[:, 0],
+                                       vh[:, 0], lwh[:, 0], p["u"])
+        o = o[:, None]
+    else:
+        o = wkv_ops.wkv6(rh, kh, vh, lwh, p["u"], route=route,
+                         chunk=cfg.ssm.rwkv_chunk)
+        new_wkv = None
+        if state is not None:
+            _, new_wkv = wkv_ref.wkv6_chunked(rh, kh, vh, lwh, p["u"],
+                                              chunk=cfg.ssm.rwkv_chunk)
+    # per-head group norm
+    of = o.reshape(B, S, H, hK).astype(jnp.float32)
+    mu = jnp.mean(of, -1, keepdims=True)
+    var = jnp.var(of, -1, keepdims=True)
+    of = (of - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = of.reshape(B, S, d).astype(x.dtype) * p["ln_scale"].astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o * jax.nn.silu(g),
+                     p["wo"].astype(x.dtype))
+    out = constrain(out, "batch", "seq", "embed")
+    if state is not None:
+        return out, {"shift_tm": x[:, -1], "wkv": new_wkv}
+    return out
+
+
+def channel_mix(p, x, state=None):
+    last = state["shift_cm"] if state is not None else None
+    xs = _shift(x, last)
+    xr = _mix(x, xs, p["cmix_r"])
+    xk = _mix(x, xs, p["cmix_k"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cwr"].astype(x.dtype)))
+    k = jnp.einsum("bsd,df->bsf", xk, p["cwk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, "batch", "seq", "mlp")
+    out = r * jnp.einsum("bsf,fd->bsd", k, p["cwv"].astype(x.dtype))
+    out = constrain(out, "batch", "seq", "embed")
+    if state is not None:
+        return out, {"shift_cm": x[:, -1]}
+    return out
+
+
+def init_rwkv6_state(B, cfg, dtype):
+    d = cfg.d_model
+    hK = cfg.ssm.rwkv_head_dim
+    H = d // hK
+    return {
+        "shift_tm": jnp.zeros((B, d), dtype),
+        "shift_cm": jnp.zeros((B, d), dtype),
+        "wkv": jnp.zeros((B, H, hK, hK), jnp.float32),
+    }

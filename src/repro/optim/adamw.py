@@ -1,0 +1,93 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure JAX).
+
+Optimizer state is a pytree mirroring params (f32 moments regardless of
+param dtype — mixed-precision-safe); everything shards with the params
+under pjit (moments inherit the param PartitionSpecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(count=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params))
+
+
+def schedule(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+           params: PyTree) -> Tuple[PyTree, AdamWState, dict]:
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamWState(count, mu, nu), \
+        {"grad_norm": gnorm, "lr": lr}

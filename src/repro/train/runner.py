@@ -1,0 +1,217 @@
+"""Fault-aware training runner: the Oobleck methodology applied to a
+training step (detection -> quarantine -> reroute -> continue).
+
+Per step:
+  * the executable for the current FaultSignature comes from the
+    Dispatcher (compile-per-signature, LRU; the no-fault program is fully
+    fused — the paper's queue bypass);
+  * StepGuard checks loss/grad finiteness; a trip restores the last
+    checkpoint and re-runs (transient) or quarantines a stage (persistent,
+    two consecutive trips);
+  * CanaryChecker sweeps each Viscosity stage's HW path against its SW
+    oracle every ``canary_every`` steps (cheap; catches silent wrong-value
+    faults that never produce NaNs);
+  * StragglerWatchdog tracks step times (multi-replica deployments feed
+    per-replica times; single-process runs feed synthetic replica ids).
+
+Checkpoints are async + checksummed; restore is elastic (any mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.core.fault import (CanaryChecker, FaultSignature, FaultState,
+                              StepGuard, StragglerWatchdog)
+from repro.core.oobleck import Dispatcher
+from repro.core.stage import Stage
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.viscosity import REGISTRY, SW
+
+PyTree = Any
+
+
+def model_stage_names(cfg: ModelConfig) -> List[str]:
+    """The Viscosity stages this architecture actually exercises."""
+    names = []
+    if not cfg.attn_free or cfg.shared_attn_every:
+        names.append("flash_attention")
+    if cfg.gated_mlp and cfg.moe is None:
+        names.append("swiglu_mlp")
+    if cfg.family == "hybrid":
+        names.append("mamba2_ssd")
+    if cfg.family == "ssm" and cfg.layer_pattern and cfg.layer_pattern[0] == 3:
+        names.append("rwkv6_wkv")
+    return names
+
+
+def canary_stages(cfg: ModelConfig, hw_route: str = "interpret"
+                  ) -> List[Stage]:
+    """Small-port canary stages for the arch's Viscosity ops."""
+    hd = 32
+    ports = {
+        "flash_attention": (jax.ShapeDtypeStruct((2, 64, 4, hd), jnp.float32),
+                            jax.ShapeDtypeStruct((2, 64, 2, hd), jnp.float32),
+                            jax.ShapeDtypeStruct((2, 64, 2, hd), jnp.float32)),
+        "swiglu_mlp": (jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                       jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                       jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                       jax.ShapeDtypeStruct((128, 64), jnp.float32)),
+        "mamba2_ssd": (jax.ShapeDtypeStruct((2, 64, 2, 16), jnp.float32),
+                       jax.ShapeDtypeStruct((2, 64, 2), jnp.float32),
+                       jax.ShapeDtypeStruct((2,), jnp.float32),
+                       jax.ShapeDtypeStruct((2, 64, 8), jnp.float32),
+                       jax.ShapeDtypeStruct((2, 64, 8), jnp.float32)),
+        "rwkv6_wkv": (jax.ShapeDtypeStruct((2, 32, 2, 16), jnp.float32),
+                      jax.ShapeDtypeStruct((2, 32, 2, 16), jnp.float32),
+                      jax.ShapeDtypeStruct((2, 32, 2, 16), jnp.float32),
+                      jax.ShapeDtypeStruct((2, 32, 2, 16), jnp.float32),
+                      jax.ShapeDtypeStruct((2, 16), jnp.float32)),
+    }
+    stages = []
+    for name in model_stage_names(cfg):
+        spec = REGISTRY.get(name)
+        stages.append(Stage(name=name, spec=spec, ports=ports[name],
+                            tol=max(spec.tol, 1e-3)))
+    return stages
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    canary_every: int = 0          # 0 = disabled
+    ckpt_dir: Optional[str] = None
+    compression: bool = False      # int8 EF gradient compression
+    hw_route: str = "sw"           # production: "hw"; CPU tests: "sw"/"interpret"
+    seed: int = 0
+
+
+class TrainRunner:
+    def __init__(self, cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                 tcfg: TrainConfig, data: SyntheticLM):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data = data
+        self.fault_state = FaultState()
+        self.stage_names = model_stage_names(cfg)
+        self.dispatcher = Dispatcher(self._build)
+        self.guard_trips = 0
+        self.watchdog = StragglerWatchdog()
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------ build
+    def _routes(self, signature: FaultSignature) -> Dict[str, str]:
+        """Map signature to per-stage routes; healthy stages use hw_route."""
+        d = {}
+        for s, r in signature.routes:
+            d[s] = self.tcfg.hw_route if r == "hw" else SW
+        return d
+
+    def _build(self, signature: FaultSignature) -> Callable:
+        model = build_model(self.cfg, routes=self._routes(signature))
+        use_comp = self.tcfg.compression
+
+        def step(params, opt_state, err, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.forward, has_aux=True)(params, batch)
+            if use_comp:
+                grads, err = optim.compress_tree(grads, err)
+            params, opt_state, om = optim.update(self.opt_cfg, grads,
+                                                 opt_state, params)
+            return params, opt_state, err, {**metrics, **om}
+
+        return jax.jit(step, donate_argnums=(0, 1, 2))
+
+    # ------------------------------------------------------------ state
+    def init_state(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(self.tcfg.seed)
+        model = build_model(self.cfg)
+        params = model.init(key)
+        opt_state = optim.init(params)
+        err = optim.init_error(params) if self.tcfg.compression else \
+            jnp.zeros(())
+        return params, opt_state, err
+
+    def signature(self) -> FaultSignature:
+        return self.fault_state.signature(self.stage_names)
+
+    def inject_fault(self, stage: str, kind: str = "injected"):
+        self.fault_state.mark(stage, 0, kind=kind)
+
+    # -------------------------------------------------------------- run
+    def run(self, params, opt_state, err, *, start_step: int = 0,
+            steps: Optional[int] = None,
+            on_step: Optional[Callable[[int, dict], None]] = None):
+        tcfg = self.tcfg
+        steps = steps if steps is not None else tcfg.steps
+        step_i = start_step
+        last_good = start_step - 1
+        while step_i < start_step + steps:
+            batch = self.data.device_batch(step_i)
+            fn = self.dispatcher.get(self.signature())
+            t0 = time.perf_counter()
+            new = fn(params, opt_state, err, batch)
+            new[-1]["loss"].block_until_ready()
+            dt = time.perf_counter() - t0
+            self.watchdog.record(0, dt)
+            params2, opt2, err2, metrics = new
+            if not StepGuard.ok({"loss": metrics["loss"],
+                                 "grad_norm": metrics["grad_norm"]}):
+                self.guard_trips += 1
+                self.fault_state.log.append(
+                    {"stage": "<step>", "replica": 0, "kind": "nan_guard",
+                     "t": time.time()})
+                if self.ckpt and last_good >= 0 and self.ckpt.steps():
+                    s = self.ckpt.latest_step()
+                    self.ckpt.wait()
+                    like = {"params": jax.tree_util.tree_map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        params),
+                        "opt": jax.tree_util.tree_map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        opt_state)}
+                    restored = self.ckpt.restore(s, like)
+                    params, opt_state = restored["params"], restored["opt"]
+                    # inputs of the failed call were donated; rebuild err
+                    err = (optim.init_error(params)
+                           if self.tcfg.compression else jnp.zeros(()))
+                    step_i = s
+                    continue
+                raise FloatingPointError("non-finite step with no checkpoint")
+            params, opt_state, err = params2, opt2, err2
+            row = {k: float(v) for k, v in metrics.items()
+                   if jnp.ndim(v) == 0}
+            row.update(step=step_i, dt=dt,
+                       n_faults=self.signature().n_faults(),
+                       compiles=self.dispatcher.compiles)
+            self.history.append(row)
+            if on_step:
+                on_step(step_i, row)
+            if tcfg.canary_every and (step_i + 1) % tcfg.canary_every == 0:
+                chk = CanaryChecker(canary_stages(self.cfg),
+                                    route_hw=tcfg.hw_route)
+                chk.sweep(self.fault_state)
+            if self.ckpt and (step_i + 1) % tcfg.ckpt_every == 0:
+                self.ckpt.save_async(step_i + 1,
+                                     {"params": params, "opt": opt_state},
+                                     extra={"data_step": step_i + 1})
+                last_good = step_i + 1
+            step_i += 1
+        if self.ckpt:
+            self.ckpt.wait()
+        return params, opt_state, err

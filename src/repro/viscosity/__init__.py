@@ -1,0 +1,5 @@
+from repro.viscosity.lang import (HW, INTERPRET, REGISTRY, SW, OpSpec, defop,
+                                  finite_valid)
+
+__all__ = ["HW", "INTERPRET", "REGISTRY", "SW", "OpSpec", "defop",
+           "finite_valid"]

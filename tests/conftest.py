@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device; only the dry-run (run as a
+# subprocess / module entry) forces 512 host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

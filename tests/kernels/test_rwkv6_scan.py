@@ -1,0 +1,67 @@
+"""RWKV6 WKV kernel: interpret-mode + chunked vs the naive recurrence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.rwkv6_scan import (wkv6, wkv6_chunked, wkv6_scan_ref,
+                                      wkv6_step)
+
+
+def _mk(rng, B, S, H, K, V, lw_max=3.0):
+    r = jnp.asarray(rng.normal(size=(B, S, H, K)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, K)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, V)), jnp.float32)
+    lw = jnp.asarray(-rng.uniform(1e-3, lw_max, size=(B, S, H, K)),
+                     jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)) * 0.3, jnp.float32)
+    return r, k, v, lw, u
+
+
+@pytest.mark.parametrize("B,S,H,K,V,chunk", [
+    (1, 32, 1, 8, 8, 8), (2, 64, 2, 16, 16, 16),
+    (1, 70, 2, 16, 16, 16),            # ragged
+    (2, 48, 4, 32, 32, 16),
+])
+def test_kernel_matches_scan(rng, B, S, H, K, V, chunk):
+    r, k, v, lw, u = _mk(rng, B, S, H, K, V)
+    ref, _ = wkv6_scan_ref(r, k, v, lw, u)
+    chk, _ = wkv6_chunked(r, k, v, lw, u, chunk=chunk)
+    hw = wkv6(r, k, v, lw, u, route="interpret", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(ref), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hw), np.asarray(ref), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_strong_decay_stays_finite(rng):
+    """Clamped decay range at chunk 16 must not overflow f32 (see kernel)."""
+    r, k, v, lw, u = _mk(rng, 1, 64, 1, 8, 8, lw_max=4.0)  # the clamp bound
+    ref, _ = wkv6_scan_ref(r, k, v, lw, u)
+    hw = wkv6(r, k, v, lw, u, route="interpret", chunk=16)
+    assert np.isfinite(np.asarray(hw)).all()
+    np.testing.assert_allclose(np.asarray(hw), np.asarray(ref), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_decode_step_consistency(rng):
+    r, k, v, lw, u = _mk(rng, 2, 33, 2, 8, 8)
+    ref, _ = wkv6_scan_ref(r, k, v, lw, u)
+    _, S1 = wkv6_scan_ref(r[:, :32], k[:, :32], v[:, :32], lw[:, :32], u)
+    y, _ = wkv6_step(S1, r[:, 32], k[:, 32], v[:, 32], lw[:, 32], u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref[:, 32]),
+                               atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.sampled_from([16, 32, 48]), H=st.integers(1, 3),
+       K=st.sampled_from([8, 16]), chunk=st.sampled_from([8, 16]))
+def test_property_chunk_invariance(S, H, K, chunk):
+    rng = np.random.default_rng(S * 7 + H + K)
+    r, k, v, lw, u = _mk(rng, 2, S, H, K, K)
+    ref, Sref = wkv6_scan_ref(r, k, v, lw, u)
+    chk, Schk = wkv6_chunked(r, k, v, lw, u, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(ref), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(Schk), np.asarray(Sref),
+                               atol=1e-4, rtol=1e-3)

@@ -1,0 +1,73 @@
+"""Fleet models (paper §II, Fig. 2; §V-G): claims + MC/analytic agreement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.datacenter import (chips_to_buy, expected_replacements,
+                                   expected_throughput, fig2_sweep,
+                                   simulate_fleet)
+
+N, T = 10_000, 1460   # the paper's fleet and horizon
+
+
+def test_fig2a_vfa_strictly_fewer_replacements():
+    rows = fig2_sweep([1e-2, 1e-3, 1e-4, 1e-5, 1e-6])
+    for p, sfa_r, vfa_r, _, _ in rows:
+        assert vfa_r < sfa_r
+
+
+def test_fig2a_threshold_claim():
+    """Below 0.01%/tick: VFA replaces <1 chip on average where SFA >50."""
+    p = 1e-5
+    assert expected_replacements(N, T, p, 1) > 50
+    assert expected_replacements(N, T, p, 3) < 1
+
+
+def test_fig2b_throughput_approaches_max():
+    tps = [expected_throughput(T, p, max_faults=3,
+                               degradation=(1.0, 0.38, 0.19))
+           for p in (1e-3, 1e-4, 1e-5, 1e-6)]
+    assert all(a < b for a, b in zip(tps, tps[1:]))   # improves as p -> 0
+    assert tps[-1] > 0.999
+    # and the loss is "extremely small" below the 0.01% threshold
+    assert tps[2] > 0.99
+
+
+def test_monte_carlo_agrees_with_analytic():
+    p = 3e-4
+    mc = simulate_fleet(N, T, p, mode="sfa", seed=1)
+    an = expected_replacements(N, T, p, 1)
+    assert mc.replacements == pytest.approx(an, rel=0.1)
+    mc3 = simulate_fleet(N, T, p, mode="vfa", max_faults=3, seed=1)
+    an3 = expected_replacements(N, T, p, 3)
+    assert mc3.replacements == pytest.approx(an3, rel=0.35, abs=3)
+
+
+def test_fixed_throughput_linear_in_retention():
+    """§II: chips bought decrease linearly with per-fault retention; 50%
+    retention -> 50% fewer purchases, 1/3 loss -> 1/3 of purchases."""
+    assert chips_to_buy(100, 0.5) == pytest.approx(50)
+    assert chips_to_buy(100, 2 / 3) == pytest.approx(100 / 3)
+    r = np.linspace(0, 1, 11)
+    buys = [chips_to_buy(100, x) for x in r]
+    diffs = np.diff(buys)
+    assert np.allclose(diffs, diffs[0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.floats(1e-6, 1e-3), mf=st.integers(2, 5))
+def test_property_vfa_dominates_sfa(p, mf):
+    assert expected_replacements(1000, 500, p, mf) <= \
+        expected_replacements(1000, 500, p, 1) + 1e-9
+
+
+def test_degradation_from_case_study():
+    """The fleet degradation curve wires to the latency model's
+    throughput_factor (FFT case study)."""
+    from repro.core.latency import fft_model, throughput_factor
+    m = fft_model()
+    deg = tuple(throughput_factor(m, k) for k in range(3))
+    assert deg[0] == 1.0 and deg[1] == pytest.approx(0.38, abs=0.02)
+    r = simulate_fleet(2000, 200, 5e-4, mode="vfa", max_faults=3,
+                       degradation=deg, seed=0)
+    assert 0.9 < r.throughput <= 1.0

@@ -1,0 +1,74 @@
+"""Optimizer + compression unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.optim.compression import compress_tree, init_error, quantize_leaf
+
+
+def test_adamw_reduces_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                            weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = optim.init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = optim.update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_schedule_shape():
+    cfg = optim.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(optim.schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                      # warmup
+    assert max(lrs) == pytest.approx(1.0, abs=0.02)
+    assert lrs[-1] == pytest.approx(0.1, abs=0.05)  # cosine floor
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    assert float(optim.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_quantize_error_feedback_unbiased_over_time():
+    """EF property: accumulated dequantized sum tracks the true sum."""
+    rng = np.random.default_rng(0)
+    err = jnp.zeros((256,))
+    true_sum = np.zeros((256,))
+    deq_sum = np.zeros((256,))
+    for i in range(50):
+        g = jnp.asarray(rng.normal(size=(256,)) * (1 + i % 3), jnp.float32)
+        q, s, err = quantize_leaf(g, err)
+        deq_sum += np.asarray(q, np.float32) * float(s)
+        true_sum += np.asarray(g)
+    # residual bounded by one quantization step, not growing
+    resid = np.abs(true_sum - deq_sum).max()
+    assert resid <= float(np.abs(np.asarray(err)).max()) + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 300), scale=st.floats(1e-3, 1e3))
+def test_property_quantization_error_bounded(n, scale):
+    rng = np.random.default_rng(n)
+    g = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s, resid = quantize_leaf(g, None)
+    assert float(jnp.abs(resid).max()) <= float(s) * 0.5 + 1e-6
+    assert q.dtype == jnp.int8
+
+
+def test_compress_tree_roundtrip_structure(rng):
+    g = {"a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    err = init_error(g)
+    deq, err2 = compress_tree(g, err)
+    assert jax.tree_util.tree_structure(deq) == \
+        jax.tree_util.tree_structure(g)
+    for a, b in zip(jax.tree_util.tree_leaves(deq),
+                    jax.tree_util.tree_leaves(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.05)

@@ -1,0 +1,102 @@
+"""Training runner: convergence, fault reroute, NaN-guard restart."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.train import TrainConfig, TrainRunner
+
+CFG = get_config("qwen1.5-4b").reduced()
+
+
+def _runner(tmp, steps=40, **kw):
+    data = SyntheticLM(DataConfig(vocab_size=CFG.vocab_size, batch=4,
+                                  seq_len=64))
+    ocfg = optim.AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=200)
+    tcfg = TrainConfig(steps=steps, ckpt_every=10, ckpt_dir=tmp, **kw)
+    return TrainRunner(CFG, ocfg, tcfg, data)
+
+
+def test_loss_decreases():
+    with tempfile.TemporaryDirectory() as tmp:
+        r = _runner(tmp, steps=60)
+        state = r.init_state()
+        r.run(*state)
+        losses = [h["loss"] for h in r.history]
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.2
+
+
+def test_fault_reroutes_and_training_continues():
+    with tempfile.TemporaryDirectory() as tmp:
+        r = _runner(tmp, steps=10)
+        params, opt, err = r.init_state()
+        params, opt, err = r.run(params, opt, err)
+        assert r.dispatcher.compiles == 1
+        r.inject_fault("flash_attention")
+        params, opt, err = r.run(params, opt, err, start_step=10, steps=10)
+        assert r.dispatcher.compiles == 2          # exactly one reconfig
+        assert r.signature().faulty() == {"flash_attention"}
+        assert all(np.isfinite(h["loss"]) for h in r.history)
+
+
+def test_fault_does_not_change_loss_values():
+    """Routing a stage to SW is value-equivalent: the next-step loss with
+    and without the fault matches (same params, same batch)."""
+    with tempfile.TemporaryDirectory() as tmp:
+        r = _runner(tmp, steps=5)
+        params, opt, err = r.init_state()
+        params, opt, err = r.run(params, opt, err)
+        batch = r.data.device_batch(99)
+
+        def copies():
+            return (jax.tree_util.tree_map(jnp.copy, params),
+                    jax.tree_util.tree_map(jnp.copy, opt), jnp.zeros(()))
+
+        healthy_fn = r.dispatcher.get(r.signature())
+        out_h = healthy_fn(*copies(), batch)   # donation-safe copies
+        loss_h = float(out_h[-1]["loss"])
+        r.inject_fault("swiglu_mlp")
+        faulty_fn = r.dispatcher.get(r.signature())
+        out_f = faulty_fn(*copies(), batch)
+        loss_f = float(out_f[-1]["loss"])
+        assert loss_h == pytest.approx(loss_f, abs=1e-3)
+
+
+def test_nan_guard_restores_checkpoint():
+    with tempfile.TemporaryDirectory() as tmp:
+        r = _runner(tmp, steps=20)
+        params, opt, err = r.init_state()
+        params, opt, err = r.run(params, opt, err)   # ckpts at 10, 20
+        # corrupt the params (simulated SDC) -> next step loss is NaN
+        bad = jax.tree_util.tree_map(lambda x: x, params)
+        bad["embed"]["table"] = bad["embed"]["table"].at[0, 0].set(
+            jnp.nan)
+        params2, opt2, err2 = r.run(bad, opt, err, start_step=20, steps=5)
+        assert r.guard_trips >= 1
+        # training recovered and completed the requested steps
+        assert r.history[-1]["step"] == 24
+        assert np.isfinite(r.history[-1]["loss"])
+
+
+def test_compression_error_feedback_converges():
+    with tempfile.TemporaryDirectory() as tmp:
+        r = _runner(tmp, steps=40, compression=True)
+        state = r.init_state()
+        r.run(*state)
+        losses = [h["loss"] for h in r.history]
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.15
+
+
+def test_straggler_watchdog():
+    from repro.core.fault import StragglerWatchdog
+    w = StragglerWatchdog(threshold=2.0, window=8)
+    for _ in range(8):
+        for rep in range(4):
+            w.record(rep, 0.1 if rep != 2 else 0.35)
+    assert w.stragglers() == [2]

@@ -1,0 +1,69 @@
+"""Viscosity layer: registry, dual lowering, contracts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import viscosity
+from repro.viscosity.lang import OpSpec, Registry
+
+
+def test_registry_contains_all_kernel_stages():
+    import repro.kernels.flash_attention  # noqa: F401
+    import repro.kernels.mamba2_scan  # noqa: F401
+    import repro.kernels.rwkv6_scan  # noqa: F401
+    import repro.kernels.checksum  # noqa: F401
+    import repro.kernels.swiglu  # noqa: F401
+    names = set(viscosity.REGISTRY.names())
+    assert {"flash_attention", "mamba2_ssd", "rwkv6_wkv", "checksum",
+            "swiglu_mlp"} <= names
+
+
+def test_duplicate_registration_rejected():
+    r = Registry()
+    spec = OpSpec(name="x", ref=lambda a: a)
+    r.register(spec)
+    with pytest.raises(ValueError, match="duplicate"):
+        r.register(spec)
+
+
+def test_lowering_targets():
+    hw_calls, sw_calls = [], []
+    spec = OpSpec(name="t", ref=lambda a: sw_calls.append(1) or a * 2,
+                  kernel=lambda a: hw_calls.append(1) or a * 2)
+    spec(jnp.ones(3), route=viscosity.SW)
+    assert sw_calls and not hw_calls
+    spec(jnp.ones(3), route=viscosity.HW)
+    assert hw_calls
+    # interpret falls back to kernel when no dedicated interpret fn
+    spec(jnp.ones(3), route=viscosity.INTERPRET)
+    assert len(hw_calls) == 2
+
+
+def test_sw_only_op_serves_all_routes():
+    spec = OpSpec(name="swonly", ref=lambda a: a + 1)
+    out = spec(jnp.zeros(2), route=viscosity.HW)
+    np.testing.assert_array_equal(np.asarray(out), [1, 1])
+
+
+def test_finite_valid_predicate():
+    ok = viscosity.finite_valid({"a": jnp.ones(3)})
+    bad = viscosity.finite_valid({"a": jnp.array([1.0, jnp.nan])})
+    assert bool(ok) and not bool(bad)
+
+
+def test_equivalence_contract_all_registered_ops():
+    """Every registered op with a kernel satisfies its own tolerance on a
+    canary (the Viscosity 'logical equivalence' guarantee)."""
+    from repro.train.runner import canary_stages
+    from repro.configs import get_config
+    for arch in ("gemma2-2b", "zamba2-1.2b", "rwkv6-1.6b"):
+        for stage in canary_stages(get_config(arch).reduced()):
+            args = stage.canary_inputs(seed=1)
+            hw = stage.run(*args, route="interpret")
+            sw = stage.run(*args, route=viscosity.SW)
+            for a, b in zip(jax.tree_util.tree_leaves(hw),
+                            jax.tree_util.tree_leaves(sw)):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    atol=stage.tol, rtol=stage.tol)
