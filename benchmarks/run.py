@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.hotspare_fig8",      # Fig. 8 FPGA fallback
     "benchmarks.kernel_micro",       # per-kernel parity + wall
     "benchmarks.step_bench",         # staged train/serve under faults
+    "benchmarks.serve_bench",        # continuous vs fixed-batch serving
     "benchmarks.roofline",           # dry-run roofline summary
 ]
 

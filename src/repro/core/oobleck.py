@@ -18,12 +18,13 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fault import FaultSignature
+from repro.core.routing import RoutingPlan
 from repro.core.stage import Stage
 from repro.viscosity.lang import HW, SW
 
@@ -44,10 +45,24 @@ class StagedAccelerator:
     def healthy_signature(self) -> FaultSignature:
         return FaultSignature.healthy(self.stage_names)
 
-    def run(self, x, signature: Optional[FaultSignature] = None):
-        routes = (signature or self.healthy_signature()).as_dict()
+    def healthy_plan(self, target: str = HW) -> RoutingPlan:
+        return RoutingPlan.for_stages(self.stage_names, target=target,
+                                      default=HW)
+
+    def plan_for(self, signature: Optional[FaultSignature]) -> RoutingPlan:
+        """Signature -> RoutingPlan (also accepts a plan, passed through)."""
+        if signature is None:
+            return self.healthy_plan()
+        if isinstance(signature, RoutingPlan):
+            return signature
+        return RoutingPlan.from_signature(signature, default=HW).validate(
+            stages=self.stage_names)
+
+    def run(self, x, signature=None):
+        """Run under a FaultSignature or a RoutingPlan (one IR, one path)."""
+        plan = self.plan_for(signature)
         for s in self.stages:
-            x = s.run(x, route=routes.get(s.name, HW))
+            x = s.run(x, route=plan)
         return x
 
     def run_reference(self, x):
@@ -77,34 +92,41 @@ class _Entry:
 
 
 class Dispatcher:
-    """Compile-per-signature cache (the paper's reconfiguration engine).
+    """Compile-per-plan LRU cache (the paper's reconfiguration engine).
 
-    ``build(signature) -> callable`` is user-supplied (e.g. jit of a train
-    step with the model rebuilt for those routes).  Reconfiguration cost =
-    one compile, paid once per new signature; monotone fault accumulation
-    keeps the signature set tiny (≤ n_stages + 1 in practice).
+    ``build(key) -> callable`` is user-supplied (e.g. jit of a train step
+    with the model rebuilt for those routes).  Keys are any hashable —
+    canonically a ``RoutingPlan`` (two fault signatures that induce the
+    same routing share one executable); the case studies key raw
+    ``FaultSignature``s.  Reconfiguration cost = one compile, paid once per
+    new key; monotone fault accumulation keeps the key set tiny
+    (≤ n_stages + 1 in practice).  Eviction is LRU at ``capacity``.
     """
 
-    def __init__(self, build: Callable[[FaultSignature], Callable],
+    def __init__(self, build: Callable[[Hashable], Callable],
                  capacity: int = 8):
         self.build = build
         self.capacity = capacity
-        self._cache: "collections.OrderedDict[FaultSignature, _Entry]" = \
+        self._cache: "collections.OrderedDict[Hashable, _Entry]" = \
             collections.OrderedDict()
         self.compiles = 0
 
-    def get(self, signature: FaultSignature) -> Callable:
-        if signature in self._cache:
-            self._cache.move_to_end(signature)
-            e = self._cache[signature]
+    def get(self, key: Hashable) -> Callable:
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            e = self._cache[key]
             e.n_calls += 1
             return e.fn
-        fn = self.build(signature)
+        fn = self.build(key)
         self.compiles += 1
-        self._cache[signature] = _Entry(fn=fn, n_calls=1)
+        self._cache[key] = _Entry(fn=fn, n_calls=1)
         if len(self._cache) > self.capacity:
             self._cache.popitem(last=False)
         return fn
 
-    def __call__(self, signature: FaultSignature, *args, **kw):
-        return self.get(signature)(*args, **kw)
+    def cached_keys(self) -> List[Hashable]:
+        """Current residents, least- to most-recently used (tests/metrics)."""
+        return list(self._cache)
+
+    def __call__(self, key: Hashable, *args, **kw):
+        return self.get(key)(*args, **kw)

@@ -1,0 +1,210 @@
+"""RoutingPlan: the unified routing IR (paper §III queue configuration).
+
+Every layer of the stack used to carry its own ad-hoc ``stage -> "hw"/"sw"``
+string dict and re-interpret it locally (viscosity, stage, oobleck, models,
+train, serve each had a private translation shim).  ``RoutingPlan`` replaces
+all of them with one first-class object:
+
+  * a **hashable, frozen per-stage mapping** ``stage -> lowering target``
+    (targets are the Viscosity lowerings: HW / SW / INTERPRET) — hashable so
+    it keys ``Dispatcher`` compile caches directly (the paper's "one
+    executable per queue configuration");
+  * **explicit fallback semantics**: a stage whose HW lowering does not
+    exist resolves to its SW oracle (``resolve``), and stages absent from
+    the plan fall back to ``default`` (or the call site's default when
+    ``default`` is None) — never an implicit re-interpretation;
+  * **derivation from fault state**: ``from_signature`` maps a
+    ``FaultSignature`` (healthy/faulty bits) to targets — healthy stages
+    get the deployment's optimized target, quarantined stages their
+    fallback;
+  * **validation against the registry** (``validate``): unknown targets and
+    unknown stage names fail loudly at plan-construction time, not deep
+    inside a trace;
+  * **resident lowering** (the paper's hot-spare mode): ``resident_routes``
+    turns a plan plus a traced ``health_mask`` into per-stage
+    ``ResidentRoute`` handles — both lowerings live in one executable
+    behind ``lax.cond``; failover is flipping one input bit, no recompile.
+
+The plan is *static* per compilation: changing a route is a reconfiguration
+(a new plan, a new cache key, one recompile), exactly mirroring the paper's
+per-sub-accelerator queue (re)configuration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Sequence, Tuple
+
+from repro.viscosity.lang import HW, INTERPRET, SW
+
+# Every target a plan may assign (the three Viscosity lowerings).
+TARGETS = (HW, SW, INTERPRET)
+
+
+@dataclass(frozen=True)
+class RoutingPlan:
+    """Frozen, hashable ``stage -> lowering target`` mapping.
+
+    ``assignments`` is kept sorted so equal mappings are equal plans (and
+    hash equal — two FaultSignatures that induce the same routing share one
+    compiled executable).  ``default`` is the target for stages not listed;
+    None defers to the consumer's own default (models fall back to SW).
+    """
+
+    assignments: Tuple[Tuple[str, str], ...] = ()
+    default: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "assignments",
+                           tuple(sorted(dict(self.assignments).items())))
+        for stage, target in self.assignments:
+            if target not in TARGETS:
+                raise ValueError(
+                    f"unknown lowering target {target!r} for stage "
+                    f"{stage!r}; expected one of {TARGETS}")
+        if self.default is not None and self.default not in TARGETS:
+            raise ValueError(f"unknown default target {self.default!r}")
+
+    # ------------------------------------------------------- constructors
+    @staticmethod
+    def make(mapping: Mapping[str, str],
+             default: Optional[str] = None) -> "RoutingPlan":
+        return RoutingPlan(tuple(mapping.items()), default)
+
+    @staticmethod
+    def for_stages(stage_names: Sequence[str], target: str = HW,
+                   default: Optional[str] = None) -> "RoutingPlan":
+        return RoutingPlan(tuple((s, target) for s in stage_names), default)
+
+    @staticmethod
+    def from_signature(signature, healthy: str = HW, fallback: str = SW,
+                       default: Optional[str] = None) -> "RoutingPlan":
+        """Derive a plan from a FaultSignature (duck-typed: anything with a
+        ``.routes`` tuple of (stage, HW-or-not) pairs).
+
+        Healthy stages are assigned ``healthy`` (the deployment's optimized
+        target — HW on TPU, SW/INTERPRET on CPU hosts); quarantined stages
+        are assigned ``fallback``.
+        """
+        return RoutingPlan(
+            tuple((s, healthy if r == HW else fallback)
+                  for s, r in signature.routes), default)
+
+    # ------------------------------------------------------------ queries
+    def as_dict(self) -> Dict[str, str]:
+        return dict(self.assignments)
+
+    def stages(self) -> Tuple[str, ...]:
+        return tuple(s for s, _ in self.assignments)
+
+    def target_for(self, stage: str) -> str:
+        """The lowering target for ``stage``; KeyError when the plan has no
+        entry and no default (a complete plan is the caller's contract)."""
+        for s, t in self.assignments:
+            if s == stage:
+                return t
+        if self.default is not None:
+            return self.default
+        raise KeyError(f"stage {stage!r} not in routing plan "
+                       f"{self.stages()} (and no default target)")
+
+    def get(self, stage: str, fallback: Optional[str] = None):
+        """dict-compatible lookup (models consult routes via ``.get``)."""
+        for s, t in self.assignments:
+            if s == stage:
+                return t
+        return self.default if self.default is not None else fallback
+
+    def fallback_stages(self, fallback: str = SW) -> Tuple[str, ...]:
+        return tuple(s for s, t in self.assignments if t == fallback)
+
+    # ------------------------------------------------------------ updates
+    def with_target(self, stage: str, target: str) -> "RoutingPlan":
+        d = self.as_dict()
+        d[stage] = target
+        return RoutingPlan(tuple(d.items()), self.default)
+
+    def with_fault(self, stage: str, fallback: str = SW) -> "RoutingPlan":
+        """Quarantine one stage: route it through its fallback lowering."""
+        return self.with_target(stage, fallback)
+
+    # --------------------------------------------------------- validation
+    def validate(self, *, registry=None,
+                 stages: Optional[Iterable[str]] = None) -> "RoutingPlan":
+        """Check the plan against the Viscosity registry and/or an explicit
+        stage universe; returns self so call sites can chain."""
+        known = set(stages) if stages is not None else None
+        for stage, _ in self.assignments:
+            if registry is not None and known is None and stage not in registry:
+                raise ValueError(
+                    f"routing plan names unknown viscosity op {stage!r}; "
+                    f"registered: {registry.names()}")
+            if known is not None and stage not in known:
+                raise ValueError(
+                    f"routing plan names unknown stage {stage!r}; "
+                    f"known: {sorted(known)}")
+        return self
+
+    # ----------------------------------------------------- lowering hooks
+    def resolve(self, spec) -> Callable[..., Any]:
+        """Lower one OpSpec under this plan (explicit fallback semantics:
+        an HW target with no kernel resolves to the SW oracle)."""
+        return spec.lower(self.target_for(spec.name))
+
+    def resident_routes(self, health_mask, stage_names: Sequence[str]
+                        ) -> Dict[str, "ResidentRoute"]:
+        """Per-stage resident route handles for the hot-spare executable.
+
+        ``health_mask`` is a traced ``(len(stage_names),)`` bool array;
+        bit i selects stage i's planned target (healthy) vs its SW oracle
+        (quarantined) at *runtime* — both paths are resident in the program.
+        """
+        return {s: ResidentRoute(hw=self.target_for(s), healthy=health_mask[i])
+                for i, s in enumerate(stage_names)}
+
+
+@dataclass
+class ResidentRoute:
+    """Runtime route handle: the paper's hot-spare residency, per stage.
+
+    Unlike a plan target (a static string baked into the trace), a
+    ResidentRoute carries a traced health bit; ``select`` lowers an OpSpec
+    to ``lax.cond(healthy, optimized, oracle)`` so failover never
+    recompiles.  Not hashable on purpose — it lives inside a traced
+    function, never in a Dispatcher cache key (the enclosing executable is
+    keyed by the static RoutingPlan it was derived from).
+    """
+
+    hw: str                 # target selected while the stage is healthy
+    healthy: Any            # scalar bool (typically a tracer)
+
+    def select(self, spec) -> Callable[..., Any]:
+        import jax
+
+        hw_fn = spec.lower(self.hw)
+        sw_fn = spec.ref
+        if hw_fn is sw_fn:      # plan already routes software: nothing to cond
+            return sw_fn
+        healthy = self.healthy
+
+        def resident(*args, **kw):
+            return jax.lax.cond(healthy,
+                                lambda ops: hw_fn(*ops, **kw),
+                                lambda ops: sw_fn(*ops, **kw),
+                                args)
+        return resident
+
+
+def as_routes(routes) -> Any:
+    """Normalize a build_model ``routes`` argument.
+
+    Accepts None (empty plan: every stage uses the consumer default),
+    a RoutingPlan, or a plain dict of targets / ResidentRoute handles
+    (the resident executable builds the dict inside its trace).  Anything
+    with a ``.get`` is returned as-is; models only ever call ``.get``.
+    """
+    if routes is None:
+        return RoutingPlan()
+    if hasattr(routes, "get"):
+        return routes
+    raise TypeError(f"routes must be None, a RoutingPlan, or a mapping; "
+                    f"got {type(routes)!r}")

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import viscosity
-from repro.viscosity.lang import HW, SW, OpSpec
+from repro.viscosity.lang import HW, INTERPRET, SW, OpSpec
 
 
 @dataclass
@@ -39,10 +39,14 @@ class Stage:
         if self.hw is None:
             self.hw = self.sw   # pure-sw stage (no optimized lowering)
 
-    def run(self, *args, route: str = HW, **kw):
-        if route in (HW, "interpret") and self.spec is not None \
-                and route == "interpret":
-            return self.spec(*args, route="interpret", **kw)
+    def run(self, *args, route=HW, **kw):
+        """Run one stage under a route: a target string or a RoutingPlan
+        (the stage resolves its own entry — the single lookup point that
+        replaced the per-layer string shims)."""
+        if hasattr(route, "target_for"):
+            route = route.target_for(self.name)
+        if route == INTERPRET and self.spec is not None:
+            return self.spec(*args, route=INTERPRET, **kw)
         fn = self.hw if route == HW else self.sw
         return fn(*args, **kw)
 

@@ -156,11 +156,19 @@ class HLOModule:
         return world
 
     def _operand_shape(self, rest: str, idx: int) -> Optional[str]:
-        # operands: "(%a, %b), dims..." -> names; look up recorded types
         m = re.match(r"([^)]*)\)", rest)
         if not m:
             return None
-        ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+        region = m.group(1)
+        # newer XLA prints operand types inline —
+        # "dot(f32[64,128]{1,0} %a, f32[128,128]{1,0} %b)" — in which case
+        # the types ARE the operand list (comma-splitting would break on
+        # the commas inside shapes); older text is names-only, looked up
+        # in the recorded shape table.
+        typed = [t.group(0) for t in _SHAPE_RE.finditer(region)]
+        if typed:
+            return typed[idx] if idx < len(typed) else None
+        ops = [o.strip().lstrip("%") for o in region.split(",")]
         if idx >= len(ops):
             return None
         return self.shapes.get(ops[idx])
@@ -187,12 +195,7 @@ class HLOModule:
         if root is None:
             return None
         if root.kind == "dynamic-update-slice":
-            upd = None
-            m = re.match(r"([^)]*)\)", root.rest)
-            if m:
-                ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
-                if len(ops) >= 2:
-                    upd = self.shapes.get(ops[1])
+            upd = self._operand_shape(root.rest, 1)
             if upd:
                 # update may itself be a fused computation's value; fall
                 # back to the smallest parameter if lookup fails
@@ -219,10 +222,7 @@ class HLOModule:
                 if mi is None:
                     return None
                 if mi.kind == "dynamic-update-slice":
-                    m2 = re.match(r"([^)]*)\)", mi.rest)
-                    ops = [o.strip().lstrip("%")
-                           for o in m2.group(1).split(",")] if m2 else []
-                    upd = self.shapes.get(ops[1]) if len(ops) >= 2 else None
+                    upd = self._operand_shape(mi.rest, 1)
                     if upd is None:
                         return None
                     total += _parse_shape(upd)[1]

@@ -20,10 +20,10 @@ def _mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
             f"mesh {shape} needs {n} devices, have {len(devices)} — the "
             "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
             " before importing jax (see launch/dryrun.py)")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices[:n])
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):   # added after jax 0.4.x; Auto is
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devices[:n], **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,8 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Batched greedy decoding with optional mid-stream fault injection: the
-engine reroutes the faulty stage through its software lowering and the
-generated tokens are bit-identical (asserted when --verify is given).
+Drives the continuous-batching engine on a synthetic workload: requests
+with independent prompt lengths and staggered arrivals stream through a
+fixed slot pool, with optional mid-stream fault injection under either
+failover mode (dispatcher-keyed recompile or resident health-mask).  With
+``--verify`` every completion is checked bit-for-bit against a
+single-request reference decode.
 """
 from __future__ import annotations
 
@@ -10,24 +13,38 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import build_model
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import (RECOMPILE, RESIDENT, ServeConfig, ServeEngine,
+                         percentile, reference_decode, synthetic_workload)
+from repro.viscosity import HW, INTERPRET, SW
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b", choices=list(ARCH_NAMES))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--fault-at", type=int, default=-1)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length (lengths are drawn in "
+                         "[4, prompt-len])")
+    ap.add_argument("--new-tokens", type=int, default=32,
+                    help="max token budget (budgets drawn in "
+                         "[4, new-tokens])")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="one request arrives every N engine steps")
+    ap.add_argument("--failover", default=RECOMPILE,
+                    choices=[RECOMPILE, RESIDENT])
+    ap.add_argument("--hw-route", default=SW, choices=[HW, SW, INTERPRET])
+    ap.add_argument("--fault-at", type=int, default=-1,
+                    help="engine step at which to quarantine --fault-stage")
     ap.add_argument("--fault-stage", default="flash_attention")
     ap.add_argument("--verify", action="store_true",
-                    help="also decode fault-free and assert identical tokens")
+                    help="check every request against single-request "
+                         "reference decode")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -35,28 +52,43 @@ def main():
         raise SystemExit("serve demo targets decoder-only LM archs")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size).astype(jnp.int32)
+    reqs = synthetic_workload(cfg.vocab_size, args.requests,
+                              np.random.default_rng(args.seed),
+                              max_prompt=args.prompt_len, min_new=4,
+                              max_new=args.new_tokens,
+                              arrival_every=args.arrival_every)
+    max_len = args.prompt_len + args.new_tokens + 1
     eng = ServeEngine(cfg, params, ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + 1))
+        max_len=max_len, max_slots=args.slots, hw_route=args.hw_route,
+        failover=args.failover))
     fault = ((args.fault_at, args.fault_stage)
              if args.fault_at >= 0 else None)
     t0 = time.perf_counter()
-    toks, stats = eng.generate(prompts, args.new_tokens, fault_at_step=fault)
+    done, stats = eng.serve(reqs, fault_at_step=fault)
     dt = time.perf_counter() - t0
-    print(f"generated {toks.shape} in {dt:.2f}s, "
-          f"recompiles={stats['recompiles']}, "
-          f"mean step {np.mean(stats['step_times'])*1e3:.1f}ms")
-    print("tokens[0]:", toks[0][:16].tolist())
-    if args.verify and fault:
-        eng2 = ServeEngine(cfg, params, ServeConfig(
-            max_len=args.prompt_len + args.new_tokens + 1))
-        toks2, _ = eng2.generate(prompts, args.new_tokens)
-        same = bool((toks == toks2).all())
-        print("fault-free tokens identical:", same)
-        if not same:
-            raise SystemExit(1)
+    n_tok = sum(len(c.tokens) for c in done.values())
+    lat = [c.latency_s for c in done.values()]
+    print(f"{len(done)}/{len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s), engine steps {stats['steps']}, "
+          f"mean occupancy "
+          f"{np.mean(stats['occupancy']) if stats['occupancy'] else 0:.2f}")
+    print(f"failover={args.failover}, recompiles={stats['recompiles']}, "
+          f"p50 latency {percentile(lat, 0.50)*1e3:.0f}ms, "
+          f"p99 {percentile(lat, 0.99)*1e3:.0f}ms")
+    if args.verify:
+        if args.hw_route != SW:
+            raise SystemExit(
+                "--verify requires --hw-route sw: across lowerings tokens "
+                "are only tol-equivalent (Viscosity contract), not "
+                "bit-exact against the SW reference decode")
+        for r in reqs:
+            ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                                   max_len=max_len)
+            if not np.array_equal(done[r.rid].tokens, ref):
+                raise SystemExit(f"request {r.rid}: tokens diverge from "
+                                 f"reference decode")
+        print(f"verified: all {len(reqs)} completions bit-identical to "
+              f"single-request reference decode")
 
 
 if __name__ == "__main__":

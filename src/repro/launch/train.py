@@ -17,6 +17,7 @@ from repro import optim
 from repro.configs import ARCH_NAMES, get_config
 from repro.data import DataConfig, SyntheticLM
 from repro.train import TrainConfig, TrainRunner
+from repro.viscosity import HW, INTERPRET, SW
 
 
 def main():
@@ -34,8 +35,8 @@ def main():
     ap.add_argument("--compression", action="store_true")
     ap.add_argument("--inject-fault-at", type=int, default=-1)
     ap.add_argument("--inject-stage", default="flash_attention")
-    ap.add_argument("--hw-route", default="sw",
-                    choices=["hw", "sw", "interpret"])
+    ap.add_argument("--hw-route", default=SW,
+                    choices=[HW, SW, INTERPRET])
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro import viscosity
 from repro.configs.base import ModelConfig
+from repro.core.routing import as_routes
 from repro.kernels.flash_attention import ops as attn_ops
 from repro.kernels.flash_attention import ref as attn_ref
 from repro.models import attention as attn_mod
@@ -31,10 +32,10 @@ def _sinusoid(S, D):
 
 
 class EncDecModel:
-    def __init__(self, cfg: ModelConfig, routes: Optional[Dict[str, str]] = None):
+    def __init__(self, cfg: ModelConfig, routes=None):
         assert cfg.is_encdec
         self.cfg = cfg
-        self.routes = dict(routes or {})
+        self.routes = as_routes(routes)
         self.compute_dtype = jnp.dtype(cfg.dtype)
         self.param_dtype = jnp.dtype(cfg.param_dtype)
 

@@ -20,6 +20,10 @@ Model = Union[LMModel, EncDecModel]
 
 
 def build_model(cfg: ModelConfig, routes=None) -> Model:
+    """Build a model under a routing: ``routes`` is the unified RoutingPlan
+    IR (preferred), a mapping of stage -> target / ResidentRoute handle
+    (the resident executable builds one inside its trace), or None (every
+    stage takes its software path)."""
     if cfg.is_encdec:
         return EncDecModel(cfg, routes=routes)
     return LMModel(cfg, routes=routes)

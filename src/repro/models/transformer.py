@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro import viscosity
 from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, MAMBA2, RWKV6, ModelConfig
+from repro.core.routing import as_routes
 from repro.launch.sharding import constrain
 from repro.models import attention as attn_mod
 from repro.models import blocks as B
@@ -83,15 +84,16 @@ def _add_aux(a, b):
 class LMModel:
     """Functional model: all methods take params explicitly.
 
-    ``routes`` is the Oobleck fault signature (stage -> HW/SW); it is
+    ``routes`` is the Oobleck RoutingPlan (stage -> lowering target); it is
     static — a new routing means a reconfiguration (recompile), exactly as
-    in the paper.
+    in the paper.  The resident (hot-spare) executable instead passes a
+    mapping of ResidentRoute handles built inside its trace.
     """
 
-    def __init__(self, cfg: ModelConfig, routes: Optional[Dict[str, str]] = None):
+    def __init__(self, cfg: ModelConfig, routes=None):
         assert not cfg.is_encdec, "use encdec.EncDecModel"
         self.cfg = cfg
-        self.routes = dict(routes or {})
+        self.routes = as_routes(routes)
         self.metas = B.make_metas(cfg)
         self.pattern = cfg.layer_pattern or (ATTN_GLOBAL,)
         self.plen = len(self.pattern)

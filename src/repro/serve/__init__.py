@@ -1,3 +1,7 @@
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import (RECOMPILE, RESIDENT, Completion, Request,
+                                ServeConfig, ServeEngine, percentile,
+                                reference_decode, synthetic_workload)
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = ["ServeConfig", "ServeEngine", "Request", "Completion",
+           "RECOMPILE", "RESIDENT", "reference_decode",
+           "synthetic_workload", "percentile"]

@@ -1,87 +1,369 @@
-"""Batched serving engine with per-stage fault failover.
+"""Fault-aware continuous-batching serve engine (paper §III at traffic scale).
 
-Prefill + greedy decode over a fixed request batch; both executables are
-signature-keyed through the Dispatcher (a detected fault reroutes the
-faulty stage and recompiles — the serving analogue of the paper's queue
-reconfiguration; decoded tokens are bit-identical across routings because
-the lowerings are Viscosity-equivalent, which the tests assert).
+Requests arrive over time with independent prompt lengths and token budgets;
+the engine keeps a fixed pool of decode *slots* (each a single-sequence KV
+lane), admits queued requests into free slots (per-request prefill), runs one
+vmapped decode step across all slots per tick, and evicts finished sequences
+so their slots immediately take new traffic — continuous batching.
+
+Routing flows through the unified ``RoutingPlan`` IR end to end, and two
+failover modes mirror the paper's two mechanisms:
+
+  * ``RECOMPILE`` (queue reconfiguration): the decode executable is keyed by
+    the current RoutingPlan in a Dispatcher; a detected fault produces a new
+    plan -> one recompile, after which in-flight decodes continue on the
+    rerouted program.  Zero overhead while healthy.
+  * ``RESIDENT`` (hot-spare residency): one decode executable carries *both*
+    lowerings of every stage behind ``lax.cond`` on a ``health_mask`` input;
+    failover is flipping one bit in that array — O(µs), no recompile — so a
+    mid-stream fault reroutes in-flight decodes without dropping them.
+
+Decoded tokens are bit-identical across routings and across batching
+schedules because the lowerings are Viscosity-equivalent and every slot is
+an independent lane (the tests assert both).
 """
 from __future__ import annotations
 
+import collections
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.fault import FaultSignature, FaultState
+from repro.core.fault import FaultState
 from repro.core.oobleck import Dispatcher
+from repro.core.routing import RoutingPlan
 from repro.models import build_model
 from repro.train.runner import model_stage_names
-from repro.viscosity import SW
+from repro.viscosity import REGISTRY, SW
+
+# Failover modes (paper §III: queue reconfiguration vs hot-spare residency).
+RECOMPILE = "recompile"
+RESIDENT = "resident"
+
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request: a prompt, a token budget, an arrival time
+    (measured in engine steps, so workloads are deterministic)."""
+    rid: int
+    prompt: Any                      # (P,) int32 array-like
+    max_new_tokens: int
+    arrival: int = 0
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray               # (max_new_tokens,) int32
+    prompt_len: int
+    arrival: int
+    admitted_step: int
+    finished_step: int
+    latency_s: float                 # wall: queue-eligible -> last token
+
+
+@dataclass
+class _Slot:
+    rid: int
+    prompt_len: int
+    arrival: int
+    remaining: int
+    out: List[int]
+    admitted_step: int
+    eligible_wall: float
 
 
 @dataclass
 class ServeConfig:
-    max_len: int = 256
-    hw_route: str = "sw"
+    max_len: int = 256               # KV capacity per slot (prompt + new)
+    max_slots: int = 4               # concurrent sequences per decode tick
+    hw_route: str = SW               # healthy-stage target (HW on real TPUs)
+    failover: str = RECOMPILE        # RECOMPILE | RESIDENT
 
 
 class ServeEngine:
+    """Continuous-batching engine; all routing flows through RoutingPlan."""
+
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        if scfg.failover not in (RECOMPILE, RESIDENT):
+            raise ValueError(f"unknown failover mode {scfg.failover!r}; "
+                             f"expected {RECOMPILE!r} or {RESIDENT!r}")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.fault_state = FaultState()
         self.stage_names = model_stage_names(cfg)
+        # Route-free model instance, used only for cache/shape structure.
+        self._shape_model = build_model(cfg)
         self._prefill = Dispatcher(self._build_prefill)
         self._decode = Dispatcher(self._build_decode)
+        # Zero KV template, shared by every admission (prefill does not
+        # donate its inputs, so one allocation serves the engine lifetime).
+        self._cache0 = self._shape_model.init_cache(1, scfg.max_len)
+        # Donating jitted slot insert: writing a prefilled lane into the
+        # S-slot pool must not copy the whole pool per admission.
+        self._insert = jax.jit(
+            lambda full, one, i: jax.tree_util.tree_map(
+                lambda f, o: jax.lax.dynamic_update_index_in_dim(f, o, i, 0),
+                full, one),
+            donate_argnums=(0,))
 
-    def _routes(self, signature: FaultSignature) -> Dict[str, str]:
-        return {s: (self.scfg.hw_route if r == "hw" else SW)
-                for s, r in signature.routes}
+    # ------------------------------------------------------------- plans
+    def plan(self) -> RoutingPlan:
+        """RoutingPlan for the current fault state (the one IR every layer
+        shares): healthy stages take the deployment target, quarantined
+        stages their SW fallback."""
+        return RoutingPlan.from_signature(
+            self.fault_state.signature(self.stage_names),
+            healthy=self.scfg.hw_route).validate(registry=REGISTRY)
 
-    def _model(self, signature):
-        return build_model(self.cfg, routes=self._routes(signature))
+    def _decode_key(self) -> RoutingPlan:
+        if self.scfg.failover == RESIDENT:
+            # One resident executable, keyed by the all-healthy plan; the
+            # health-mask input does the rerouting at runtime.
+            return RoutingPlan.for_stages(self.stage_names,
+                                          target=self.scfg.hw_route)
+        return self.plan()
 
-    def _build_prefill(self, signature) -> Callable:
-        model = self._model(signature)
-        return jax.jit(model.prefill)
-
-    def _build_decode(self, signature) -> Callable:
-        model = self._model(signature)
-        return jax.jit(model.decode_step, donate_argnums=(1,))
-
-    def signature(self) -> FaultSignature:
-        return self.fault_state.signature(self.stage_names)
+    def health_mask(self) -> jax.Array:
+        return jnp.asarray([not self.fault_state.is_faulty(s)
+                            for s in self.stage_names], dtype=bool)
 
     def inject_fault(self, stage: str):
+        if stage not in self.stage_names:
+            raise ValueError(f"unknown stage {stage!r}; this model's stages:"
+                             f" {self.stage_names}")
         self.fault_state.mark(stage, 0, kind="injected")
 
-    def generate(self, prompts: jax.Array, n_new: int,
-                 *, fault_at_step: Optional[Tuple[int, str]] = None
-                 ) -> Tuple[np.ndarray, Dict[str, Any]]:
-        """Greedy decode. prompts (B, P) int32. Returns (B, n_new) tokens."""
-        B, P = prompts.shape
-        model = self._model(self.signature())
-        cache = model.init_cache(B, self.scfg.max_len)
-        logits, state = self._prefill.get(self.signature())(
-            self.params, {"tokens": prompts, "cache": cache})
-        out = []
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        stats = {"step_times": [], "recompiles": 0}
-        for i in range(n_new):
-            out.append(np.asarray(tok))
-            if fault_at_step and i == fault_at_step[0]:
+    # ------------------------------------------------------------ builds
+    def _build_prefill(self, plan: RoutingPlan):
+        if self.scfg.failover == RESIDENT:
+            # Admissions after a fault must not stall in-flight decodes on
+            # a recompile either: prefill is resident too (one executable
+            # per prompt length, rerouted by the same health mask).
+            names = list(self.stage_names)
+            cfg = self.cfg
+
+            def prefill(params, batch, mask):
+                routes = plan.resident_routes(mask, names)
+                return build_model(cfg, routes=routes).prefill(params, batch)
+
+            return jax.jit(prefill)
+        model = build_model(self.cfg, routes=plan)
+        return jax.jit(model.prefill)
+
+    def _run_prefill(self, params, batch):
+        key = self._decode_key()
+        if self.scfg.failover == RESIDENT:
+            return self._prefill.get(key)(params, batch, self.health_mask())
+        return self._prefill.get(key)(params, batch)
+
+    def _build_decode(self, plan: RoutingPlan):
+        if self.scfg.failover == RESIDENT:
+            names = list(self.stage_names)
+            cfg = self.cfg
+
+            def step(params, cache, tokens, t, mask):
+                routes = plan.resident_routes(mask, names)
+                model = build_model(cfg, routes=routes)
+                return model.decode_step(params, cache, tokens, t)
+
+            return jax.jit(jax.vmap(step, in_axes=(None, 0, 0, 0, None)),
+                           donate_argnums=(1,))
+        model = build_model(self.cfg, routes=plan)
+        return jax.jit(jax.vmap(model.decode_step, in_axes=(None, 0, 0, 0)),
+                       donate_argnums=(1,))
+
+    # --------------------------------------------------------- admission
+    def _validate(self, requests: Sequence[Request]):
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("duplicate request ids")
+        for r in requests:
+            if len(r.prompt) < 1:
+                raise ValueError(f"request {r.rid}: prompt must be "
+                                 f"non-empty")
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.rid}: max_new_tokens must be "
+                                 f">= 1, got {r.max_new_tokens}")
+            if len(r.prompt) + r.max_new_tokens > self.scfg.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({len(r.prompt)}) + budget "
+                    f"({r.max_new_tokens}) exceeds max_len "
+                    f"{self.scfg.max_len}")
+
+    def _admit(self, req: Request, i: int, caches, toks, tvec):
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        P = prompt.shape[1]
+        logits, cache = self._run_prefill(
+            self.params, {"tokens": prompt, "cache": self._cache0})
+        first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)   # (1,)
+        caches = self._insert(caches, cache, jnp.int32(i))
+        toks = toks.at[i].set(first[:, None])
+        tvec = tvec.at[i].set(P)
+        return caches, toks, tvec, int(first[0])
+
+    # -------------------------------------------------------------- run
+    def serve(self, requests: Sequence[Request], *,
+              fault_at_step: Optional[Tuple[int, str]] = None
+              ) -> Tuple[Dict[int, Completion], Dict[str, Any]]:
+        """Run a workload to completion.
+
+        ``fault_at_step=(k, stage)`` quarantines ``stage`` just before
+        engine step ``k`` (admissions and the decode tick at ``k`` already
+        run rerouted).  Returns ({rid: Completion}, stats).
+        """
+        scfg = self.scfg
+        S = scfg.max_slots
+        self._validate(requests)
+        queue = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        caches = jax.tree_util.tree_map(lambda a: jnp.stack([a] * S),
+                                        self._cache0)
+        toks = jnp.zeros((S, 1, 1), jnp.int32)
+        tvec = jnp.zeros((S,), jnp.int32)
+        slots: List[Optional[_Slot]] = [None] * S
+        eligible_wall: Dict[int, float] = {}
+        completions: Dict[int, Completion] = {}
+        decode_keys = set()
+        prefill_compiles0 = self._prefill.compiles
+        stats: Dict[str, Any] = {"step_times": [], "occupancy": [],
+                                 "admitted": 0, "steps": 0}
+        step = 0
+        while queue or any(sl is not None for sl in slots):
+            if fault_at_step is not None and step == fault_at_step[0]:
                 self.inject_fault(fault_at_step[1])
+            now = time.perf_counter()
+            for r in queue:
+                if r.arrival <= step and r.rid not in eligible_wall:
+                    eligible_wall[r.rid] = now
+            # admission: arrived requests claim free slots (join)
+            for i in range(S):
+                if slots[i] is None and queue and queue[0].arrival <= step:
+                    req = queue.popleft()
+                    caches, toks, tvec, first = self._admit(
+                        req, i, caches, toks, tvec)
+                    slots[i] = _Slot(rid=req.rid, prompt_len=len(req.prompt),
+                                     arrival=req.arrival,
+                                     remaining=req.max_new_tokens - 1,
+                                     out=[first], admitted_step=step,
+                                     eligible_wall=eligible_wall.get(req.rid,
+                                                                     now))
+                    stats["admitted"] += 1
+                    if slots[i].remaining == 0:       # single-token request
+                        self._finish(slots, i, step, completions)
+            active = [i for i in range(S) if slots[i] is not None]
+            if not active:
+                step += 1            # idle tick: waiting on future arrivals
+                continue
+            key = self._decode_key()
+            fn = self._decode.get(key)
+            decode_keys.add(key)
             t0 = time.perf_counter()
-            logits, state = self._decode.get(self.signature())(
-                self.params, state, tok, jnp.int32(P + i))
-            logits.block_until_ready()
+            if scfg.failover == RESIDENT:
+                logits, caches = fn(self.params, caches, toks, tvec,
+                                    self.health_mask())
+            else:
+                logits, caches = fn(self.params, caches, toks, tvec)
+            nxt = jnp.argmax(logits[:, 0, -1], -1).astype(jnp.int32)  # (S,)
+            nxt.block_until_ready()
             stats["step_times"].append(time.perf_counter() - t0)
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        stats["recompiles"] = self._decode.compiles - 1
-        return np.concatenate(out, axis=1), stats
+            stats["occupancy"].append(len(active))
+            toks = nxt[:, None, None]
+            active_mask = np.zeros((S,), np.int32)
+            active_mask[active] = 1
+            tvec = tvec + jnp.asarray(active_mask)
+            nxt_np = np.asarray(nxt)
+            for i in active:
+                sl = slots[i]
+                sl.out.append(int(nxt_np[i]))
+                sl.remaining -= 1
+                if sl.remaining == 0:                 # evict finished
+                    self._finish(slots, i, step, completions)
+            step += 1
+        stats["steps"] = step
+        stats["recompiles"] = max(0, len(decode_keys) - 1)
+        stats["decode_compiles"] = self._decode.compiles
+        stats["prefill_compiles"] = self._prefill.compiles - prefill_compiles0
+        return completions, stats
+
+    @staticmethod
+    def _finish(slots, i, step, completions):
+        sl = slots[i]
+        completions[sl.rid] = Completion(
+            rid=sl.rid, tokens=np.asarray(sl.out, np.int32),
+            prompt_len=sl.prompt_len, arrival=sl.arrival,
+            admitted_step=sl.admitted_step, finished_step=step,
+            latency_s=time.perf_counter() - sl.eligible_wall)
+        slots[i] = None
+
+    # ------------------------------------------------- fixed-batch compat
+    def generate(self, prompts, n_new: int, *,
+                 fault_at_step: Optional[Tuple[int, str]] = None
+                 ) -> Tuple[np.ndarray, Dict[str, Any]]:
+        """Fixed-batch convenience wrapper: every row of ``prompts`` (B, P)
+        arrives at step 0 and decodes ``n_new`` tokens; returns (B, n_new)
+        greedy tokens (row i = prompt i).  ``fault_at_step`` indexes decode
+        steps, as in the pre-continuous engine."""
+        prompts = np.asarray(prompts)
+        B = prompts.shape[0]
+        if B > self.scfg.max_slots:
+            raise ValueError(f"batch {B} exceeds max_slots "
+                             f"{self.scfg.max_slots}")
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=n_new)
+                for i in range(B)]
+        completions, stats = self.serve(reqs, fault_at_step=fault_at_step)
+        toks = np.stack([completions[i].tokens for i in range(B)])
+        return toks, stats
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (one convention for every latency report)."""
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(len(xs) * q))]
+
+
+def synthetic_workload(vocab_size: int, n_requests: int, rng, *,
+                       min_prompt: int = 4, max_prompt: int = 20,
+                       min_new: int = 3, max_new: int = 10,
+                       arrival_every: int = 2, per_arrival: int = 1
+                       ) -> List[Request]:
+    """Staggered random workload: ``n_requests`` requests with prompt
+    lengths in [min_prompt, max_prompt], budgets in [min_new, max_new],
+    arriving ``per_arrival`` at a time every ``arrival_every`` engine
+    steps.  One builder for the tests, examples, launcher, and benches."""
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab_size,
+                                        size=int(rng.integers(
+                                            min_prompt, max_prompt + 1))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(min_new, max_new + 1)),
+                    arrival=(i // per_arrival) * arrival_every)
+            for i in range(n_requests)]
+
+
+def reference_decode(cfg: ModelConfig, params, prompt, n_new: int, *,
+                     max_len: int, routes: Optional[RoutingPlan] = None
+                     ) -> np.ndarray:
+    """Single-request greedy decode straight on the model — no slots, no
+    vmap, no engine.  The per-request oracle the batching engine must match
+    bit-for-bit (used by tests and serve_bench)."""
+    model = build_model(cfg, routes=routes)
+    prompt = jnp.asarray(prompt, jnp.int32)[None]
+    P = prompt.shape[1]
+    cache = model.init_cache(1, max_len)
+    logits, state = jax.jit(model.prefill)(
+        params, {"tokens": prompt, "cache": cache})
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [int(tok[0, 0])]
+    step_fn = jax.jit(model.decode_step)
+    for i in range(n_new - 1):
+        logits, state = step_fn(params, state, tok, jnp.int32(P + i))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(int(tok[0, 0]))
+    return np.asarray(out, np.int32)

@@ -33,10 +33,11 @@ from repro.configs.base import ModelConfig
 from repro.core.fault import (CanaryChecker, FaultSignature, FaultState,
                               StepGuard, StragglerWatchdog)
 from repro.core.oobleck import Dispatcher
+from repro.core.routing import RoutingPlan
 from repro.core.stage import Stage
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import build_model
-from repro.viscosity import REGISTRY, SW
+from repro.viscosity import INTERPRET, REGISTRY, SW
 
 PyTree = Any
 
@@ -55,7 +56,7 @@ def model_stage_names(cfg: ModelConfig) -> List[str]:
     return names
 
 
-def canary_stages(cfg: ModelConfig, hw_route: str = "interpret"
+def canary_stages(cfg: ModelConfig, hw_route: str = INTERPRET
                   ) -> List[Stage]:
     """Small-port canary stages for the arch's Viscosity ops."""
     hd = 32
@@ -94,7 +95,7 @@ class TrainConfig:
     canary_every: int = 0          # 0 = disabled
     ckpt_dir: Optional[str] = None
     compression: bool = False      # int8 EF gradient compression
-    hw_route: str = "sw"           # production: "hw"; CPU tests: "sw"/"interpret"
+    hw_route: str = SW             # production: HW; CPU tests: SW/INTERPRET
     seed: int = 0
 
 
@@ -115,15 +116,8 @@ class TrainRunner:
         self.history: List[Dict[str, float]] = []
 
     # ------------------------------------------------------------ build
-    def _routes(self, signature: FaultSignature) -> Dict[str, str]:
-        """Map signature to per-stage routes; healthy stages use hw_route."""
-        d = {}
-        for s, r in signature.routes:
-            d[s] = self.tcfg.hw_route if r == "hw" else SW
-        return d
-
-    def _build(self, signature: FaultSignature) -> Callable:
-        model = build_model(self.cfg, routes=self._routes(signature))
+    def _build(self, plan: RoutingPlan) -> Callable:
+        model = build_model(self.cfg, routes=plan)
         use_comp = self.tcfg.compression
 
         def step(params, opt_state, err, batch):
@@ -150,7 +144,18 @@ class TrainRunner:
     def signature(self) -> FaultSignature:
         return self.fault_state.signature(self.stage_names)
 
+    def plan(self) -> RoutingPlan:
+        """The RoutingPlan for the current fault state: healthy stages take
+        the deployment's optimized target, quarantined ones fall back to
+        the SW oracle.  Hashable — it is the Dispatcher cache key."""
+        return RoutingPlan.from_signature(
+            self.signature(), healthy=self.tcfg.hw_route).validate(
+                registry=REGISTRY)
+
     def inject_fault(self, stage: str, kind: str = "injected"):
+        if stage not in self.stage_names:
+            raise ValueError(f"unknown stage {stage!r}; this model's stages:"
+                             f" {self.stage_names}")
         self.fault_state.mark(stage, 0, kind=kind)
 
     # -------------------------------------------------------------- run
@@ -163,7 +168,7 @@ class TrainRunner:
         last_good = start_step - 1
         while step_i < start_step + steps:
             batch = self.data.device_batch(step_i)
-            fn = self.dispatcher.get(self.signature())
+            fn = self.dispatcher.get(self.plan())
             t0 = time.perf_counter()
             new = fn(params, opt_state, err, batch)
             new[-1]["loss"].block_until_ready()

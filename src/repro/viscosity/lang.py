@@ -15,10 +15,16 @@ equivalence.  The TPU-native equivalent implemented here:
 An OpSpec also carries the paper's valid/ready notion: ``valid(out)`` is a
 cheap predicate over outputs (e.g. "finite") used by detectors.
 
-Routing is static per compilation: a ``route`` (HW / SW) selects the
-lowering at trace time, exactly mirroring the paper's per-sub-accelerator
-queue (re)configuration — changing a route is a reconfiguration
-(recompile), not a redesign.
+Routing is static per compilation: a ``route`` selects the lowering at
+trace time, exactly mirroring the paper's per-sub-accelerator queue
+(re)configuration — changing a route is a reconfiguration (recompile),
+not a redesign.  A route is one of
+  * a target string (HW / SW / INTERPRET),
+  * a ``core.routing.RoutingPlan`` (the unified routing IR) — the op looks
+    up its own stage entry (duck-typed via ``target_for`` so this module
+    stays dependency-free), or
+  * a ``core.routing.ResidentRoute`` handle (duck-typed via ``select``) —
+    the hot-spare lowering: both paths resident behind ``lax.cond``.
 """
 from __future__ import annotations
 
@@ -45,7 +51,11 @@ class OpSpec:
     tol: float = 2e-2                             # hw-vs-sw allclose contract (bf16)
     flops: Optional[Callable[..., int]] = None    # analytic flop model (roofline)
 
-    def lower(self, target: str) -> Callable[..., Any]:
+    def lower(self, target) -> Callable[..., Any]:
+        if hasattr(target, "target_for"):   # RoutingPlan: my stage's entry
+            target = target.target_for(self.name)
+        if hasattr(target, "select"):       # ResidentRoute: runtime cond
+            return target.select(self)
         if target == SW or self.kernel is None:
             return self.ref
         if target == HW:
@@ -54,7 +64,7 @@ class OpSpec:
             return self.interpret or self.kernel
         raise ValueError(f"unknown lowering target {target!r} for op {self.name}")
 
-    def __call__(self, *args, route: str = SW, **kw):
+    def __call__(self, *args, route=SW, **kw):
         return self.lower(route)(*args, **kw)
 
 

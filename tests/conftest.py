@@ -1,8 +1,15 @@
 import os
+import sys
 
 # Smoke tests and benches must see ONE device; only the dry-run (run as a
 # subprocess / module entry) forces 512 host devices.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Make tests/ importable from every test dir (incl. tests/kernels/) so the
+# shared _hypothesis_compat shim is a single module, not nine copies.
+_here = os.path.dirname(__file__)
+if _here not in sys.path:
+    sys.path.insert(0, _here)
 
 import numpy as np
 import pytest

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.mamba2_scan import (ssd, ssd_chunked, ssd_scan_ref,
                                        ssd_step)

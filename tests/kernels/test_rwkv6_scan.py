@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.rwkv6_scan import (wkv6, wkv6_chunked, wkv6_scan_ref,
                                       wkv6_step)

@@ -1,7 +1,7 @@
 """Fleet models (paper §II, Fig. 2; §V-G): claims + MC/analytic agreement."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.datacenter import (chips_to_buy, expected_replacements,
                                    expected_throughput, fig2_sweep,

@@ -1,7 +1,7 @@
 """Latency model (paper §V, Figs. 5-8): reported numbers + qualitative laws."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.latency import (AccelModel, aes_model, dct_model, exec_time,
                                 fft_model, passthrough_model, speedup_vs_sw,

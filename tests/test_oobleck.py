@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CanaryChecker, Dispatcher, FaultSignature,
                         FaultState, Stage, StagedAccelerator, inject)
@@ -131,3 +131,123 @@ def test_injected_stage_breaks_then_sw_fallback_fixes(rng):
     sig = bad.healthy_signature().with_fault("fft_s3")
     out_fixed = np.asarray(bad.run(x, sig))
     np.testing.assert_allclose(out_fixed, ref, atol=1e-4)
+
+
+# ------------------------------------------------------ dispatcher LRU
+def _counting_dispatcher(capacity=2):
+    calls = []
+
+    def build(key):
+        calls.append(key)
+        return lambda: key
+
+    return Dispatcher(build, capacity=capacity), calls
+
+
+def test_dispatcher_lru_evicts_at_capacity():
+    d, calls = _counting_dispatcher(capacity=2)
+    d.get("a"), d.get("b")
+    assert d.cached_keys() == ["a", "b"]
+    d.get("c")                                  # evicts the LRU entry "a"
+    assert d.cached_keys() == ["b", "c"]
+    assert d.compiles == 3
+
+
+def test_dispatcher_hit_moves_to_end():
+    d, calls = _counting_dispatcher(capacity=2)
+    d.get("a"), d.get("b")
+    d.get("a")                                  # hit: "a" becomes MRU
+    assert d.cached_keys() == ["b", "a"]
+    d.get("c")                                  # now "b" is the LRU victim
+    assert d.cached_keys() == ["a", "c"]
+
+
+def test_dispatcher_compiles_monotone_and_recompiles_after_eviction():
+    d, calls = _counting_dispatcher(capacity=2)
+    seen = []
+    for key in ["a", "b", "a", "c", "a"]:       # "a" evicted by "c"? no:
+        d.get(key)                              # a,b -> hit a -> c evicts b
+        seen.append(d.compiles)
+    assert seen == sorted(seen)                 # counter never decreases
+    assert d.compiles == 3                      # a, b, c
+    d.get("b")                                  # b was evicted: rebuilt
+    assert d.compiles == 4
+    assert calls == ["a", "b", "c", "b"]
+
+
+def test_dispatcher_keyed_by_routing_plan():
+    """RoutingPlans are hashable dispatcher keys; equal plans (even built
+    from different fault histories) share one executable."""
+    from repro.core.routing import RoutingPlan
+
+    d, calls = _counting_dispatcher(capacity=4)
+    sig = FaultSignature.healthy(["a", "b"])
+    p1 = RoutingPlan.from_signature(sig.with_fault("a"))
+    p2 = RoutingPlan.from_signature(
+        FaultSignature.healthy(["b", "a"]).with_fault("a"))
+    d.get(p1), d.get(p2)
+    assert p1 == p2 and d.compiles == 1
+
+
+# -------------------------------------------------------- RoutingPlan IR
+def test_routing_plan_from_signature_and_fallbacks():
+    from repro.core.routing import RoutingPlan
+    from repro.viscosity import HW, INTERPRET, SW
+
+    sig = FaultSignature.healthy(["s0", "s1", "s2"]).with_fault("s1")
+    plan = RoutingPlan.from_signature(sig, healthy=INTERPRET)
+    assert plan.target_for("s0") == INTERPRET
+    assert plan.target_for("s1") == SW
+    assert plan.fallback_stages() == ("s1",)
+    assert plan.with_fault("s2").target_for("s2") == SW
+    assert hash(plan) == hash(RoutingPlan.from_signature(sig,
+                                                         healthy=INTERPRET))
+    # unlisted stage: explicit default wins, else the call site's
+    assert RoutingPlan(default=HW).target_for("anything") == HW
+    assert plan.get("missing", HW) == HW
+    with pytest.raises(KeyError):
+        plan.target_for("missing")
+
+
+def test_routing_plan_validates():
+    from repro.core.routing import RoutingPlan
+
+    with pytest.raises(ValueError):
+        RoutingPlan((("s0", "warp-drive"),))
+    with pytest.raises(ValueError):
+        RoutingPlan((("s0", "sw"),)).validate(stages=["s1"])
+    from repro.viscosity import REGISTRY
+    with pytest.raises(ValueError):
+        RoutingPlan((("not_a_real_op", "sw"),)).validate(registry=REGISTRY)
+    # registered ops validate cleanly
+    RoutingPlan((("flash_attention", "sw"),)).validate(registry=REGISTRY)
+
+
+def test_staged_accelerator_accepts_plan(rng):
+    """StagedAccelerator.run takes the RoutingPlan IR directly."""
+    from repro.core.routing import RoutingPlan
+
+    acc = fft_accelerator(64)
+    x = _fft_input(rng, B=2)
+    ref = np.asarray(acc.run_reference(x))
+    plan = acc.healthy_plan().with_fault("fft_s2").with_fault("fft_s5")
+    np.testing.assert_allclose(np.asarray(acc.run(x, plan)), ref, atol=1e-4)
+
+
+def test_resident_route_conds_between_lowerings():
+    """ResidentRoute lowers an op to lax.cond(healthy, hw, sw): with
+    observably different lowerings the mask bit selects the path."""
+    from repro.core.routing import RoutingPlan
+    from repro.viscosity.lang import OpSpec
+
+    spec = OpSpec(name="toy", ref=lambda x: x + 1.0,
+                  kernel=lambda x: x + 2.0)
+    plan = RoutingPlan((("toy", "hw"),))
+
+    def f(x, mask):
+        routes = plan.resident_routes(mask, ["toy"])
+        return spec(x, route=routes["toy"])
+
+    x = jnp.float32(10.0)
+    assert float(jax.jit(f)(x, jnp.array([True]))) == 12.0   # hw path
+    assert float(jax.jit(f)(x, jnp.array([False]))) == 11.0  # sw oracle

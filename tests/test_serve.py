@@ -1,4 +1,6 @@
-"""Serving engine: generation, mid-stream fault failover bit-equivalence."""
+"""Continuous-batching serve engine: admission/evict scheduling, per-request
+bit-equivalence with single-request reference decode, and mid-stream fault
+failover under both modes (dispatcher recompile + resident health mask)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,20 +8,30 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import (RECOMPILE, RESIDENT, Request, ServeConfig,
+                         ServeEngine, reference_decode, synthetic_workload)
+from repro.viscosity import INTERPRET, SW
 
 KEY = jax.random.PRNGKey(0)
 
 
-def _engine(arch="qwen1.5-4b"):
+def _setup(arch="qwen1.5-4b"):
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(KEY)
-    return cfg, params, ServeEngine(cfg, params, ServeConfig(max_len=80))
+    return cfg, params
 
 
+def _workload(cfg, n, rng, max_prompt=19, max_new=9, arrival_every=2):
+    return synthetic_workload(cfg.vocab_size, n, rng, max_prompt=max_prompt,
+                              max_new=max_new, arrival_every=arrival_every,
+                              per_arrival=2)
+
+
+# --------------------------------------------------------- fixed-batch API
 def test_generate_shapes_and_determinism():
-    cfg, params, eng = _engine()
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=80))
     prompts = jax.random.randint(KEY, (3, 16), 0, cfg.vocab_size).astype(
         jnp.int32)
     toks1, _ = eng.generate(prompts, 12)
@@ -31,23 +43,168 @@ def test_generate_shapes_and_determinism():
 def test_fault_midstream_identical_tokens():
     """The paper's functional guarantee, end-to-end on a real LM: a fault
     + reroute mid-generation leaves the decoded tokens unchanged."""
-    cfg, params, eng = _engine()
+    cfg, params = _setup()
     prompts = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size).astype(
         jnp.int32)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=80))
     base, _ = eng.generate(prompts, 16)
     eng2 = ServeEngine(cfg, params, ServeConfig(max_len=80))
     faulted, stats = eng2.generate(prompts, 16,
                                    fault_at_step=(8, "flash_attention"))
     np.testing.assert_array_equal(base, faulted)
-    assert stats["recompiles"] == 1
+    assert eng2.fault_state.is_faulty("flash_attention")
 
 
 def test_fault_midstream_ssm():
-    cfg, params, eng = _engine("rwkv6-1.6b")
+    cfg, params = _setup("rwkv6-1.6b")
     prompts = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size).astype(
         jnp.int32)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=80))
     base, _ = eng.generate(prompts, 8)
     eng2 = ServeEngine(cfg, params, ServeConfig(max_len=80))
-    faulted, stats = eng2.generate(prompts, 8,
-                                   fault_at_step=(4, "rwkv6_wkv"))
+    faulted, _ = eng2.generate(prompts, 8, fault_at_step=(4, "rwkv6_wkv"))
     np.testing.assert_array_equal(base, faulted)
+
+
+# --------------------------------------------------- continuous batching
+def test_unequal_lengths_match_reference_decode():
+    """Requests of unequal prompt length and budget, decoded together in
+    slots, are bit-identical to single-request decode on the bare model."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    reqs = _workload(cfg, 6, rng)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, max_slots=3))
+    done, stats = eng.serve(reqs)
+    assert sorted(done) == sorted(r.rid for r in reqs)
+    for r in reqs:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=64)
+        np.testing.assert_array_equal(done[r.rid].tokens, ref)
+        assert done[r.rid].prompt_len == len(r.prompt)
+        assert len(done[r.rid].tokens) == r.max_new_tokens
+
+
+def test_staggered_admission_and_slot_reuse():
+    """More requests than slots with staggered arrivals: slots are reused
+    (continuous batching), nobody is admitted before arrival, and the
+    engine ends with everything completed."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    reqs = _workload(cfg, 16, rng, arrival_every=3)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, max_slots=4))
+    done, stats = eng.serve(reqs)
+    assert len(done) == 16
+    assert stats["admitted"] == 16
+    assert max(stats["occupancy"]) <= 4
+    for r in reqs:
+        assert done[r.rid].admitted_step >= r.arrival
+    # with 16 requests on 4 slots the engine must have reused slots
+    assert stats["steps"] > max(r.arrival for r in reqs)
+
+
+@pytest.mark.parametrize("mode", [RECOMPILE, RESIDENT])
+def test_fault_mid_decode_completes_in_flight(mode):
+    """A stage quarantined while sequences are mid-decode: every in-flight
+    request still completes, with outputs bit-identical to the
+    single-request reference (and to a fault-free serve)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    reqs = _workload(cfg, 8, rng)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, max_slots=3,
+                                               failover=mode))
+    done, stats = eng.serve(reqs, fault_at_step=(4, "flash_attention"))
+    assert len(done) == len(reqs)
+    assert eng.fault_state.is_faulty("flash_attention")
+    for r in reqs:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=64)
+        np.testing.assert_array_equal(done[r.rid].tokens, ref)
+
+
+def test_recompile_mode_reconfigures_once():
+    """With a healthy route distinct from the fallback, a fault is exactly
+    one reconfiguration (plan-keyed Dispatcher recompile)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    reqs = _workload(cfg, 4, rng, max_new=7)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, max_slots=2,
+                                               hw_route=INTERPRET,
+                                               failover=RECOMPILE))
+    done, stats = eng.serve(reqs, fault_at_step=(3, "flash_attention"))
+    assert len(done) == len(reqs)
+    assert stats["recompiles"] == 1
+    assert stats["decode_compiles"] == 2
+
+
+def test_resident_mode_never_recompiles():
+    """Hot-spare residency: the fault flips a health-mask bit; the decode
+    executable is compiled exactly once."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    reqs = _workload(cfg, 4, rng, max_new=7)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, max_slots=2,
+                                               hw_route=INTERPRET,
+                                               failover=RESIDENT))
+    done, stats = eng.serve(reqs, fault_at_step=(3, "flash_attention"))
+    assert len(done) == len(reqs)
+    assert stats["recompiles"] == 0
+    assert stats["decode_compiles"] == 1
+    # prefill is resident too: one dispatcher build serves admissions on
+    # both sides of the fault (jit re-specializes per prompt length only)
+    assert stats["prefill_compiles"] == 1
+
+
+def test_failover_modes_agree():
+    """Same workload, same mid-stream fault: recompile and resident modes
+    produce identical tokens (same routing history, two mechanisms)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    reqs = _workload(cfg, 5, rng, max_new=7)
+    outs = {}
+    for mode in (RECOMPILE, RESIDENT):
+        eng = ServeEngine(cfg, params, ServeConfig(max_len=64, max_slots=3,
+                                                   hw_route=INTERPRET,
+                                                   failover=mode))
+        done, _ = eng.serve(reqs, fault_at_step=(3, "flash_attention"))
+        outs[mode] = done
+    for r in reqs:
+        np.testing.assert_array_equal(outs[RECOMPILE][r.rid].tokens,
+                                      outs[RESIDENT][r.rid].tokens)
+
+
+def test_plan_dedupes_identical_routings():
+    """When healthy target == fallback, a fault does not change the
+    RoutingPlan, so the dispatcher never recompiles — signature-keyed
+    caching could not see this."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    reqs = _workload(cfg, 3, rng, max_new=6)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, max_slots=3,
+                                               hw_route=SW))
+    done, stats = eng.serve(reqs, fault_at_step=(2, "flash_attention"))
+    assert len(done) == len(reqs)
+    assert stats["recompiles"] == 0 and stats["decode_compiles"] == 1
+
+
+def test_request_validation():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=16, max_slots=2))
+    too_long = Request(rid=0, prompt=np.zeros(12, np.int32),
+                       max_new_tokens=8)
+    with pytest.raises(ValueError):
+        eng.serve([too_long])
+    with pytest.raises(ValueError):   # would otherwise never finish
+        eng.serve([Request(rid=0, prompt=np.zeros(4, np.int32),
+                           max_new_tokens=0)])
+    with pytest.raises(ValueError):   # would otherwise crash inside jit
+        eng.serve([Request(rid=0, prompt=np.zeros(0, np.int32),
+                           max_new_tokens=2)])
+    with pytest.raises(ValueError):   # unknown stage names fail loudly
+        eng.inject_fault("warp_core")
+    with pytest.raises(ValueError):
+        eng.serve([Request(rid=1, prompt=np.zeros(4, np.int32),
+                           max_new_tokens=2),
+                   Request(rid=1, prompt=np.zeros(4, np.int32),
+                           max_new_tokens=2)])
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, ServeConfig(failover="bogus"))

@@ -69,7 +69,9 @@ def test_full_lifecycle_train_fault_restart():
         # fault mid-life -> reroute, keep training
         r.inject_fault("flash_attention")
         params, opt, err = r.run(params, opt, err, start_step=20, steps=10)
-        assert r.dispatcher.compiles == 2
+        # healthy target == SW fallback on CPU -> same RoutingPlan, so the
+        # plan-keyed dispatcher dedupes the reconfiguration entirely
+        assert r.dispatcher.compiles == 1
         # "process restart": a fresh runner restores the async checkpoint
         r2 = TrainRunner(cfg, ocfg,
                          TrainConfig(steps=10, ckpt_every=10, ckpt_dir=tmp),

@@ -40,9 +40,26 @@ def test_fault_reroutes_and_training_continues():
         assert r.dispatcher.compiles == 1
         r.inject_fault("flash_attention")
         params, opt, err = r.run(params, opt, err, start_step=10, steps=10)
-        assert r.dispatcher.compiles == 2          # exactly one reconfig
+        # The CPU deployment's healthy target IS the SW oracle, so the
+        # quarantine does not change the RoutingPlan — plan-keyed dispatch
+        # dedupes it to zero recompiles (signature-keyed caching paid one).
+        assert r.dispatcher.compiles == 1
+        assert r.plan() == r.dispatcher.cached_keys()[-1]
         assert r.signature().faulty() == {"flash_attention"}
         assert all(np.isfinite(h["loss"]) for h in r.history)
+
+
+def test_fault_reconfigures_when_routes_differ():
+    """When the healthy target differs from the fallback, a fault is a new
+    plan -> exactly one reconfiguration (compile) at the dispatcher."""
+    with tempfile.TemporaryDirectory() as tmp:
+        r = _runner(tmp, steps=1, hw_route="interpret")
+        plan_h = r.plan()
+        r.inject_fault("flash_attention")
+        plan_f = r.plan()
+        assert plan_h != plan_f
+        assert plan_f.target_for("flash_attention") == "sw"
+        assert plan_f.target_for("swiglu_mlp") == "interpret"
 
 
 def test_fault_does_not_change_loss_values():
@@ -58,11 +75,11 @@ def test_fault_does_not_change_loss_values():
             return (jax.tree_util.tree_map(jnp.copy, params),
                     jax.tree_util.tree_map(jnp.copy, opt), jnp.zeros(()))
 
-        healthy_fn = r.dispatcher.get(r.signature())
+        healthy_fn = r.dispatcher.get(r.plan())
         out_h = healthy_fn(*copies(), batch)   # donation-safe copies
         loss_h = float(out_h[-1]["loss"])
         r.inject_fault("swiglu_mlp")
-        faulty_fn = r.dispatcher.get(r.signature())
+        faulty_fn = r.dispatcher.get(r.plan())
         out_f = faulty_fn(*copies(), batch)
         loss_f = float(out_f[-1]["loss"])
         assert loss_h == pytest.approx(loss_f, abs=1e-3)
