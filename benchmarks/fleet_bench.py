@@ -1,0 +1,109 @@
+"""Fleet benchmark: Monte-Carlo fault trace through the real serve fleet.
+
+The executed version of Fig. 2/Fig. 8: ``simulate_fleet`` draws a fault
+trace, ``replay_trace`` turns it into engine events + the analytic VFA
+capacity curve, and ``FleetHarness`` measures the real
+``FleetServeEngine``'s aggregate tokens/step against that curve — with and
+without a hot-spare pool, so the spare's capacity retention is a measured
+number, not just the analytic claim.
+
+``python benchmarks/fleet_bench.py`` prints one JSON object (CI smoke
+asserts it parses); ``run()`` returns the usual ``name,us_per_call,
+derived`` rows for ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.datacenter import FleetHarness, replay_trace, simulate_fleet
+from repro.models import build_model
+from repro.serve import FleetConfig, FleetServeEngine, Request, ServeConfig
+from repro.train.runner import model_stage_names
+
+ARCH = "qwen1.5-4b"
+N_WORKERS = 3
+SLOTS = 6
+MAX_LEN = 32
+HORIZON = 20
+DEGRADATION = (1.0, 0.38, 0.19)   # FFT case-study VFA curve
+MAX_FAULTS = 3
+P_FAULT = 0.02
+SEED = 7
+
+
+def _requests(cfg, rng, n_tokens: int):
+    budget = 12
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=8).astype(np.int32),
+                    max_new_tokens=budget)
+            for i in range(max(1, n_tokens // budget))]
+
+
+def run_scenario(n_spares: int):
+    """The one scenario definition (CI smoke, the tier-1 acceptance test,
+    and examples/datacenter_sim.py --replay all drive this): returns the
+    full FleetHarness result dict plus the workload and model, so callers
+    can also assert per-request bit-identity."""
+    cfg = get_config(ARCH).reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    stages = model_stage_names(cfg)
+    mc = simulate_fleet(N_WORKERS, HORIZON, P_FAULT, max_faults=MAX_FAULTS,
+                        degradation=DEGRADATION, replace_failed=False,
+                        seed=SEED, record_trace=True)
+    rep = replay_trace(mc.trace, n_workers=N_WORKERS, ticks=HORIZON,
+                       stage_names=stages, degradation=DEGRADATION,
+                       max_faults=MAX_FAULTS, n_spares=n_spares,
+                       slots_per_device=SLOTS)
+    eng = FleetServeEngine(
+        cfg, params, ServeConfig(max_len=MAX_LEN, max_slots=SLOTS),
+        FleetConfig(n_devices=N_WORKERS + n_spares, n_spares=n_spares,
+                    degradation=DEGRADATION))
+    rng = np.random.default_rng(1)
+    reqs = _requests(cfg, rng, int(N_WORKERS * SLOTS * HORIZON * 1.5))
+    t0 = time.perf_counter()
+    out = FleetHarness(eng, rep, horizon=HORIZON).run(reqs)
+    out.update(n_spares=n_spares, trace_faults=len(mc.trace),
+               wall_s=time.perf_counter() - t0)
+    return out, reqs, cfg, params
+
+
+def bench(n_spares: int):
+    out, reqs, _cfg, _params = run_scenario(n_spares)
+    return {k: out[k] for k in (
+        "n_spares", "trace_faults", "measured_ratio", "analytic_ratio",
+        "rel_err", "healthy_tokens_per_step", "faulted_tokens_per_step",
+        "requeued", "quarantined", "spares_in_service", "wall_s")} | {
+        "completed": len(out["completions"][1])}
+
+
+def run():
+    """CSV rows for benchmarks/run.py (name, us_per_call, derived)."""
+    rows = []
+    for n_spares in (0, 1):
+        r = bench(n_spares)
+        rows.append((
+            f"fleet_trace_spares{n_spares}",
+            1e6 * r["wall_s"] / max(1, r["completed"]),
+            f"measured={r['measured_ratio']:.3f};"
+            f"analytic={r['analytic_ratio']:.3f};"
+            f"rel_err={r['rel_err']:.3f};requeued={r['requeued']}"))
+    return rows
+
+
+def main():
+    out = {"workload": {"arch": ARCH, "workers": N_WORKERS, "slots": SLOTS,
+                        "horizon": HORIZON, "p_fault": P_FAULT,
+                        "degradation": list(DEGRADATION)},
+           "no_spares": bench(0),
+           "hot_spare": bench(1)}
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
-"""Elastic re-shard: train on a (2, 4) mesh, lose a "pod" of devices,
-restore the checkpoint onto a (1, 4) mesh, and continue training.
+"""Elastic re-shard on the fleet API: train on a health-masked mesh, lose
+a "pod" of devices (FleetPlan device faults), rebuild the mesh view from
+the surviving fleet, restore the checkpoint onto it, and continue.
 
 This script forces 8 host devices, so it must run as its own process:
     PYTHONPATH=src python examples/elastic_train.py
@@ -8,6 +9,9 @@ import os
 
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
                            + os.environ.get("XLA_FLAGS", ""))
+# Pin the CPU backend: off-TPU, probing the TPU plugin first burns minutes
+# on metadata retries before falling back to CPU anyway.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import tempfile
 
@@ -19,10 +23,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import optim
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
+from repro.core.routing import FleetPlan
 from repro.data import DataConfig, SyntheticLM
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import FleetMeshView
 from repro.launch.partition import params_pspecs
 from repro.models import build_model
+from repro.train.runner import model_stage_names
 
 
 def jit_step(model, ocfg, mesh, params):
@@ -49,11 +55,16 @@ def main():
     ocfg = optim.AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=100)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, batch=8,
                                   seq_len=32))
+    stages = model_stage_names(cfg)
     with tempfile.TemporaryDirectory() as tmp:
         ckpt = CheckpointManager(tmp)
 
-        # --- phase 1: full fleet (2 x 4 mesh) ---
-        mesh1 = make_mesh((2, 4), ("data", "model"))
+        # --- phase 1: full healthy fleet -> (2, 4) health-masked mesh ---
+        fleet = FleetPlan.healthy(8, stages)
+        view1 = FleetMeshView.from_plan(fleet)
+        mesh1 = view1.submesh(("data", "model"), model=4)
+        print(f"phase 1 fleet: serving {view1.serving()} -> mesh "
+              f"{mesh1.devices.shape}")
         with mesh1:
             params = model.init(jax.random.PRNGKey(0))
             step1, p_sh1 = jit_step(model, ocfg, mesh1, params)
@@ -68,8 +79,15 @@ def main():
         print(f"phase 1 (2x4 mesh): loss {losses[0]:.3f} -> {losses[-1]:.3f}"
               f"; checkpoint saved at step 10")
 
-        # --- phase 2: half the fleet "failed" -> 1 x 4 mesh, resharded ---
-        mesh2 = make_mesh((1, 4), ("data", "model"))
+        # --- phase 2: a "pod" of 4 devices fails; the FleetPlan carries
+        # the quarantine and the mesh view re-folds the survivors ---
+        for d in (4, 5, 6, 7):
+            fleet = fleet.with_device_fault(d)
+        view2 = FleetMeshView.from_plan(fleet)
+        assert view2.quarantined == (4, 5, 6, 7)
+        mesh2 = view2.submesh(("data", "model"), model=4)
+        print(f"phase 2 fleet: quarantined {view2.quarantined}, serving "
+              f"{view2.serving()} -> mesh {mesh2.devices.shape}")
         with mesh2:
             like = {"params": params, "opt": opt_state}
             p_sh2 = jax.tree_util.tree_map(
@@ -92,8 +110,10 @@ def main():
         print(f"phase 2 (1x4 mesh after pod loss): loss {losses2[0]:.3f} "
               f"-> {losses2[-1]:.3f}")
         assert np.isfinite(losses + losses2).all()
-        print("OK: elastic restore onto a smaller mesh (optimizer step "
-              "count preserved), training continued from the checkpoint.")
+        print("OK: FleetPlan carried the pod loss as an explicit mask, the "
+              "health-masked mesh view re-folded the survivors, and "
+              "training continued from the checkpoint (optimizer step "
+              "count preserved).")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,11 @@ from repro.core.fault import (FaultInjector, FaultSignature, FaultState,
                               CanaryChecker, StepGuard, StragglerWatchdog,
                               inject)
 from repro.core.oobleck import Dispatcher, StagedAccelerator
-from repro.core.routing import ResidentRoute, RoutingPlan
+from repro.core.routing import (FleetPlan, ResidentRoute, RoutingPlan,
+                                SparePool)
 from repro.core.stage import Stage
 
 __all__ = ["Stage", "StagedAccelerator", "Dispatcher", "FaultSignature",
            "FaultState", "FaultInjector", "CanaryChecker", "StepGuard",
-           "StragglerWatchdog", "inject", "RoutingPlan", "ResidentRoute"]
+           "StragglerWatchdog", "inject", "RoutingPlan", "ResidentRoute",
+           "FleetPlan", "SparePool"]

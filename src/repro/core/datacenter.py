@@ -17,7 +17,7 @@ aggregate throughput scale linearly with per-fault performance retention.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -27,6 +27,9 @@ class FleetResult:
     replacements: float
     throughput: float          # mean aggregate throughput / max possible
     faults_total: float
+    # (tick, chip) fault events in draw order — the Monte-Carlo trace the
+    # FleetHarness replays through the real engines (record_trace=True).
+    trace: Tuple[Tuple[int, int], ...] = ()
 
 
 # ------------------------------------------------------------ Monte Carlo
@@ -34,6 +37,7 @@ def simulate_fleet(n_chips: int, ticks: int, p_fault: float, *,
                    mode: str = "vfa", max_faults: int = 3,
                    degradation: Sequence[float] = (1.0, 0.38, 0.19),
                    replace_failed: bool = True, seed: int = 0,
+                   record_trace: bool = False,
                    ) -> FleetResult:
     """Vectorized fleet simulation.
 
@@ -50,9 +54,12 @@ def simulate_fleet(n_chips: int, ticks: int, p_fault: float, *,
     replacements = 0
     faults_total = 0
     tp_acc = 0.0
-    for _ in range(ticks):
+    trace: List[Tuple[int, int]] = []
+    for t in range(ticks):
         hit = rng.random(n_chips) < p_fault
         faults_total += int(hit.sum())
+        if record_trace:
+            trace.extend((t, int(c)) for c in np.flatnonzero(hit))
         faults = faults + hit
         dead = faults >= max_faults
         n_dead = int(dead.sum())
@@ -64,7 +71,8 @@ def simulate_fleet(n_chips: int, ticks: int, p_fault: float, *,
         tp_acc += float(deg[np.minimum(faults, max_faults - 1)].sum())
     return FleetResult(replacements=float(replacements),
                        throughput=tp_acc / (ticks * n_chips),
-                       faults_total=float(faults_total))
+                       faults_total=float(faults_total),
+                       trace=tuple(trace))
 
 
 # ---------------------------------------------------------------- analytic
@@ -120,6 +128,142 @@ def chips_to_buy(n_faulted: int, retention: float) -> float:
     retain ``retention`` of their performance.  SFA: retention=0 -> buy all.
     Linear in (1 - retention), as the paper states."""
     return n_faulted * (1.0 - retention)
+
+
+# ------------------------------------------------ trace -> fleet scenario
+@dataclass
+class TraceReplay:
+    """One Monte-Carlo fault trace turned into an executable fleet
+    scenario: per-engine-step fault events plus the analytic per-tick
+    capacity curve they imply."""
+
+    events: Dict[int, List[Tuple]]        # engine step -> fleet events
+    capacity: np.ndarray                  # (ticks,) analytic fleet capacity
+    healthy_capacity: float               # capacity with zero faults
+    n_dropped: int                        # trace faults on already-dead HW
+
+    @property
+    def mean_ratio(self) -> float:
+        """Mean aggregate throughput relative to the healthy fleet — the
+        analytic VFA degradation prediction for this trace."""
+        return float(np.mean(self.capacity) / self.healthy_capacity)
+
+
+def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
+                 ticks: int, stage_names: Sequence[str],
+                 degradation: Sequence[float] = (1.0, 0.38, 0.19),
+                 max_faults: int = 3, n_spares: int = 0,
+                 slots_per_device: int = 1,
+                 steps_per_tick: int = 1) -> TraceReplay:
+    """Mirror of the FleetPlan transition semantics over a fault trace.
+
+    A fault on a serving device migrates its work to a free hot spare
+    (paper Fig. 8) before anything degrades; with the pool dry, fault k
+    quarantines ``stage_names[k]`` in place (VFA degradation); at
+    ``max_faults`` the device dies.  Returns both the engine event
+    schedule and the analytic capacity curve in *slots* (quantized the
+    same way ``FleetConfig.capacity_for`` quantizes the serve engine),
+    so measured-vs-analytic comparisons are slot-exact.
+    """
+    deg = list(degradation)
+    if max_faults > len(stage_names) + 1:
+        raise ValueError(
+            f"max_faults={max_faults} needs at least {max_faults - 1} "
+            f"stages to quarantine one per fault before device death; "
+            f"model has {len(stage_names)}: {list(stage_names)}")
+    n_devices = n_workers + n_spares
+
+    def slot_cap(k: int) -> float:
+        return round(slots_per_device * deg[min(k, len(deg) - 1)])
+
+    faults = {d: 0 for d in range(n_devices)}     # fallback stages per dev
+    serving = set(range(n_workers))
+    free_spares = list(range(n_workers, n_devices))
+    dead: set = set()
+    events: Dict[int, List[Tuple]] = {}
+    capacity = np.zeros(ticks)
+    n_dropped = 0
+    by_tick: Dict[int, List[int]] = {}
+    for t, c in trace:
+        by_tick.setdefault(t, []).append(c)
+    for t in range(ticks):
+        for c in by_tick.get(t, ()):
+            if c >= n_devices or c not in serving:
+                n_dropped += 1            # fault on quarantined/dead HW
+                continue
+            step = t * steps_per_tick
+            if free_spares:               # migrate before degrading
+                spare = free_spares.pop(0)
+                serving.discard(c)
+                serving.add(spare)
+                events.setdefault(step, []).append(
+                    ("stage", c, stage_names[min(faults[c],
+                                                 len(stage_names) - 1)]))
+                faults[c] += 1
+            elif faults[c] + 1 >= max_faults:
+                serving.discard(c)
+                dead.add(c)
+                events.setdefault(step, []).append(("device", c))
+            else:
+                events.setdefault(step, []).append(
+                    ("stage", c, stage_names[min(faults[c],
+                                                 len(stage_names) - 1)]))
+                faults[c] += 1
+        capacity[t] = sum(slot_cap(faults[d]) for d in serving)
+    return TraceReplay(events=events, capacity=capacity,
+                       healthy_capacity=float(n_workers *
+                                              slot_cap(0)),
+                       n_dropped=n_dropped)
+
+
+class FleetHarness:
+    """Close the loop on Fig. 2 / Fig. 8: replay a ``simulate_fleet``
+    Monte-Carlo fault trace through the *real* serve engine and compare
+    measured aggregate throughput against the analytic VFA degradation
+    curve, while every completion stays bit-identical to the healthy
+    single-device reference.
+
+    The engine is passed in (built by the caller from ``repro.serve``), so
+    the analytic layer never imports the serving stack.  Throughput is
+    measured as decoded tokens per engine step over the fault horizon,
+    normalized by a healthy run of the same workload — the same ratio the
+    analytic capacity curve predicts.
+    """
+
+    def __init__(self, engine, replay: TraceReplay, *, horizon: int):
+        self.engine = engine
+        self.replay = replay
+        self.horizon = horizon
+
+    def _mean_tokens(self, stats) -> float:
+        per_step = stats["per_step_tokens"][:self.horizon]
+        if len(per_step) < self.horizon:
+            raise ValueError(
+                f"engine finished after {len(per_step)} steps, before the "
+                f"{self.horizon}-step fault horizon — the measured and "
+                "analytic windows would not match; use a longer / more "
+                "saturated workload")
+        return float(np.mean(per_step))
+
+    def run(self, requests) -> Dict[str, Any]:
+        healthy_done, healthy_stats = self.engine.serve(requests)
+        healthy_tps = self._mean_tokens(healthy_stats)
+        faulted_done, faulted_stats = self.engine.serve(
+            requests, events=self.replay.events)
+        measured = self._mean_tokens(faulted_stats) / healthy_tps
+        analytic = self.replay.mean_ratio
+        return {
+            "measured_ratio": measured,
+            "analytic_ratio": analytic,
+            "rel_err": abs(measured - analytic) / analytic,
+            "healthy_tokens_per_step": healthy_tps,
+            "faulted_tokens_per_step": self._mean_tokens(faulted_stats),
+            "requeued": faulted_stats["requeued"],
+            "quarantined": faulted_stats["quarantined"],
+            "spares_in_service": faulted_stats["spares_in_service"],
+            "completions": (healthy_done, faulted_done),
+            "stats": (healthy_stats, faulted_stats),
+        }
 
 
 def fig2_sweep(fault_rates: Sequence[float], *, n_chips: int = 10_000,

@@ -98,7 +98,10 @@ class Dispatcher:
     with the model rebuilt for those routes).  Keys are any hashable —
     canonically a ``RoutingPlan`` (two fault signatures that induce the
     same routing share one executable); the case studies key raw
-    ``FaultSignature``s.  Reconfiguration cost = one compile, paid once per
+    ``FaultSignature``s.  A key exposing ``compile_key()`` (``FleetPlan``)
+    is canonicalized through it before lookup, so two fleets with the same
+    per-device routing *multiset* share compiles even when the device
+    numbering differs.  Reconfiguration cost = one compile, paid once per
     new key; monotone fault accumulation keeps the key set tiny
     (≤ n_stages + 1 in practice).  Eviction is LRU at ``capacity``.
     """
@@ -112,14 +115,16 @@ class Dispatcher:
         self.compiles = 0
 
     def get(self, key: Hashable) -> Callable:
-        if key in self._cache:
-            self._cache.move_to_end(key)
-            e = self._cache[key]
+        cache_key = (key.compile_key()
+                     if hasattr(key, "compile_key") else key)
+        if cache_key in self._cache:
+            self._cache.move_to_end(cache_key)
+            e = self._cache[cache_key]
             e.n_calls += 1
             return e.fn
         fn = self.build(key)
         self.compiles += 1
-        self._cache[key] = _Entry(fn=fn, n_calls=1)
+        self._cache[cache_key] = _Entry(fn=fn, n_calls=1)
         if len(self._cache) > self.capacity:
             self._cache.popitem(last=False)
         return fn

@@ -194,6 +194,252 @@ class ResidentRoute:
         return resident
 
 
+# --------------------------------------------------------------------------
+# Fleet layer: device-indexed plans + hot-spare pool (paper §II Fig. 2,
+# §V Fig. 8).  A FleetPlan lifts RoutingPlan from "one plan per process" to
+# a frozen device_index -> RoutingPlan table with explicit spare semantics:
+# a faulted device's work migrates to a hot spare *before* any stage drops
+# to its SW oracle; only once spares are exhausted does a device degrade in
+# place (per-stage SW fallback), and at device death with no spare left its
+# capacity is simply lost.  All transitions are pure (each returns a new
+# FleetPlan), so fleet health history is a value, exactly like RoutingPlan.
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SparePool:
+    """Hot-spare bookkeeping (paper Fig. 8 semantics).
+
+    ``spares`` is the reserved device-index pool; ``assignments`` maps each
+    migrated-away device to the spare now carrying its traffic.  Invariant:
+    no spare ever serves two devices (each target appears at most once).
+    """
+
+    spares: Tuple[int, ...] = ()
+    assignments: Tuple[Tuple[int, int], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "spares", tuple(sorted(set(self.spares))))
+        object.__setattr__(self, "assignments",
+                           tuple(sorted(self.assignments)))
+        targets = [s for _, s in self.assignments]
+        if len(set(targets)) != len(targets):
+            raise ValueError(
+                f"spare pool maps two devices to one spare: {self.assignments}")
+        sources = [d for d, _ in self.assignments]
+        if len(set(sources)) != len(sources):
+            raise ValueError(
+                f"device migrated to two spares: {self.assignments}")
+        for _, s in self.assignments:
+            if s not in self.spares:
+                raise ValueError(f"assignment target {s} is not in the spare "
+                                 f"pool {self.spares}")
+
+    # ------------------------------------------------------------ queries
+    def free(self) -> Tuple[int, ...]:
+        """Spares not yet carrying anyone's traffic (lowest index first)."""
+        used = {s for _, s in self.assignments}
+        return tuple(s for s in self.spares if s not in used)
+
+    def in_service(self) -> Tuple[int, ...]:
+        """Spares currently carrying a migrated device's traffic."""
+        return tuple(s for _, s in self.assignments)
+
+    def spare_for(self, device: int) -> Optional[int]:
+        for d, s in self.assignments:
+            if d == device:
+                return s
+        return None
+
+    # ------------------------------------------------------- transitions
+    def assign(self, device: int, exclude: Sequence[int] = ()
+               ) -> Tuple["SparePool", Optional[int]]:
+        """Claim the lowest free spare for ``device``; (self, None) when the
+        pool is exhausted.  ``exclude`` holds spares that must not be handed
+        out (quarantined spares released back by a recovery)."""
+        free = tuple(s for s in self.free() if s not in exclude)
+        if not free:
+            return self, None
+        spare = free[0]
+        return SparePool(self.spares,
+                         self.assignments + ((device, spare),)), spare
+
+    def release(self, device: int) -> "SparePool":
+        """Return ``device``'s spare to the pool (fault-then-recover)."""
+        return SparePool(self.spares, tuple((d, s) for d, s in
+                                            self.assignments if d != device))
+
+
+def _plan_sort_key(plan: RoutingPlan):
+    return (plan.assignments, plan.default or "")
+
+
+@dataclass(frozen=True)
+class FleetPlan:
+    """Frozen, hashable ``device_index -> RoutingPlan`` table + spare pool.
+
+    ``plans[i]`` is the routing plan device ``i`` runs *when serving*;
+    ``pool`` carries the hot spares; ``quarantined`` lists devices out of
+    service (migrated away or dead).  A device is **serving** iff it is not
+    quarantined and not an idle spare.  Equality/hash are exact-table (two
+    identical fleet histories are one value); ``compile_key()`` is the
+    *multiset* of serving plans — the Dispatcher key — so two fleets whose
+    devices route the same way (in any device order) share executables.
+    """
+
+    plans: Tuple[RoutingPlan, ...] = ()
+    pool: SparePool = SparePool()
+    quarantined: Tuple[int, ...] = ()
+    # Physical faults accumulated per device — independent of the route
+    # strings (with hw_route=SW a faulted stage's target does not change,
+    # but the silicon is still degraded and the capacity model must know).
+    fault_counts: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "plans", tuple(self.plans))
+        object.__setattr__(self, "quarantined",
+                           tuple(sorted(set(self.quarantined))))
+        n = len(self.plans)
+        if not self.fault_counts:
+            object.__setattr__(self, "fault_counts", (0,) * n)
+        else:
+            object.__setattr__(self, "fault_counts",
+                               tuple(self.fault_counts))
+        if len(self.fault_counts) != n:
+            raise ValueError(f"fault_counts has {len(self.fault_counts)} "
+                             f"entries for a {n}-device fleet")
+        for p in self.plans:
+            if not isinstance(p, RoutingPlan):
+                raise TypeError(f"FleetPlan entries must be RoutingPlans; "
+                                f"got {type(p)!r}")
+        for d in self.quarantined + self.pool.spares:
+            if not 0 <= d < n:
+                raise ValueError(f"device index {d} out of range for a "
+                                 f"{n}-device fleet")
+
+    # ------------------------------------------------------- constructors
+    @staticmethod
+    def healthy(n_devices: int, stage_names: Sequence[str], *,
+                target: str = HW, n_spares: int = 0,
+                default: Optional[str] = None) -> "FleetPlan":
+        """All-healthy fleet; the last ``n_spares`` devices are the hot-
+        spare pool (idle until a worker faults)."""
+        if n_spares >= n_devices:
+            raise ValueError(f"fleet of {n_devices} cannot reserve "
+                             f"{n_spares} spares")
+        plan = RoutingPlan.for_stages(stage_names, target=target,
+                                      default=default)
+        return FleetPlan(plans=(plan,) * n_devices,
+                         pool=SparePool(tuple(range(n_devices - n_spares,
+                                                    n_devices))))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def n_devices(self) -> int:
+        return len(self.plans)
+
+    def serving(self) -> Tuple[int, ...]:
+        """Devices currently taking traffic: active workers + in-service
+        spares, minus everything quarantined."""
+        idle = set(self.pool.free())
+        quarantined = set(self.quarantined)
+        return tuple(d for d in range(self.n_devices)
+                     if d not in idle and d not in quarantined)
+
+    def device_mask(self) -> Tuple[bool, ...]:
+        """Explicit health mask over *all* devices (True = serving) — the
+        view launch/mesh.py and sharding.py consume."""
+        serving = set(self.serving())
+        return tuple(d in serving for d in range(self.n_devices))
+
+    def plan_for(self, device: int) -> RoutingPlan:
+        """The RoutingPlan ``device`` consults; KeyError when it is not
+        serving (quarantined or an idle spare)."""
+        if device not in self.serving():
+            raise KeyError(f"device {device} is not serving (quarantined="
+                           f"{self.quarantined}, idle spares="
+                           f"{self.pool.free()})")
+        return self.plans[device]
+
+    def n_faults(self, device: int) -> int:
+        """Physical faults device ``device`` has accumulated — the index
+        into the VFA degradation curve (route-string independent)."""
+        return self.fault_counts[device]
+
+    def compile_key(self) -> Tuple[Tuple[Tuple[str, str], ...], ...]:
+        """Multiset (sorted tuple) of serving plans: the Dispatcher cache
+        key.  Two fleets with the same per-device routing multiset share
+        one compiled-executable set regardless of device numbering."""
+        return tuple(tuple(_plan_sort_key(self.plans[d]))
+                     for d in sorted(self.serving(),
+                                     key=lambda d: _plan_sort_key(
+                                         self.plans[d])))
+
+    # ------------------------------------------------------- transitions
+    def _set_plan(self, device: int, plan: RoutingPlan
+                  ) -> Tuple[RoutingPlan, ...]:
+        return self.plans[:device] + (plan,) + self.plans[device + 1:]
+
+    def _bump(self, device: int) -> Tuple[int, ...]:
+        return (self.fault_counts[:device]
+                + (self.fault_counts[device] + 1,)
+                + self.fault_counts[device + 1:])
+
+    def with_stage_fault(self, device: int, stage: str,
+                         fallback: str = SW) -> "FleetPlan":
+        """One stage of ``device`` faults.  Paper Fig. 8 semantics: migrate
+        the device's work to a free hot spare first; only with the pool
+        exhausted does the stage drop to its SW oracle in place."""
+        if device not in self.serving():
+            raise ValueError(f"device {device} is not serving; cannot fault "
+                             f"stage {stage!r} there")
+        pool, spare = self.pool.assign(device, exclude=self.quarantined)
+        plans = self._set_plan(device,
+                               self.plans[device].with_fault(stage, fallback))
+        counts = self._bump(device)
+        if spare is not None:
+            return FleetPlan(plans=plans, pool=pool,
+                             quarantined=self.quarantined + (device,),
+                             fault_counts=counts)
+        return FleetPlan(plans=plans, pool=self.pool,
+                         quarantined=self.quarantined, fault_counts=counts)
+
+    def with_device_fault(self, device: int) -> "FleetPlan":
+        """Whole-device loss: migrate to a spare when one is free,
+        otherwise the device's capacity is simply gone."""
+        if device not in self.serving():
+            raise ValueError(f"device {device} is not serving; cannot fail "
+                             f"it")
+        pool, _spare = self.pool.assign(device, exclude=self.quarantined)
+        return FleetPlan(plans=self.plans, pool=pool,
+                         quarantined=self.quarantined + (device,),
+                         fault_counts=self._bump(device))
+
+    def with_recovery(self, device: int, stage_names: Sequence[str], *,
+                      target: str = HW) -> "FleetPlan":
+        """Repaired device rejoins healthy; its spare (if any) drains back
+        to the idle pool."""
+        if device not in self.quarantined:
+            raise ValueError(f"device {device} is not quarantined; nothing "
+                             f"to recover")
+        plans = self._set_plan(
+            device, RoutingPlan.for_stages(stage_names, target=target,
+                                           default=self.plans[device].default))
+        counts = (self.fault_counts[:device] + (0,)
+                  + self.fault_counts[device + 1:])
+        return FleetPlan(plans=plans, pool=self.pool.release(device),
+                         quarantined=tuple(d for d in self.quarantined
+                                           if d != device),
+                         fault_counts=counts)
+
+    # --------------------------------------------------------- validation
+    def validate(self, *, registry=None,
+                 stages: Optional[Iterable[str]] = None) -> "FleetPlan":
+        for p in self.plans:
+            p.validate(registry=registry, stages=stages)
+        return self
+
+
 def as_routes(routes) -> Any:
     """Normalize a build_model ``routes`` argument.
 

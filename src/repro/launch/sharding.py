@@ -88,3 +88,28 @@ def constrain(x, *names: Optional[str]):
 
 def named_sharding(mesh: Mesh, *names: Optional[str]) -> NamedSharding:
     return NamedSharding(mesh, resolve(*names))
+
+
+# ----------------------------------------------------- fleet health view
+def shard_bounds(n_items: int, device_mask: Sequence[bool]
+                 ) -> Dict[int, Tuple[int, int]]:
+    """Partition ``n_items`` rows across the *serving* devices of a fleet.
+
+    ``device_mask`` is the FleetPlan/FleetMeshView health mask (True =
+    serving).  Returns ``{device_index: (start, stop)}`` covering
+    [0, n_items) contiguously, remainder spread one row at a time over the
+    first shards — quarantined devices and idle spares get no slice, so a
+    shrinking fleet automatically rebalances the same global batch.
+    """
+    serving = [i for i, ok in enumerate(device_mask) if ok]
+    if not serving:
+        raise ValueError("no serving devices: the whole fleet is "
+                         "quarantined or idle spares")
+    base, rem = divmod(n_items, len(serving))
+    bounds: Dict[int, Tuple[int, int]] = {}
+    start = 0
+    for k, dev in enumerate(serving):
+        size = base + (1 if k < rem else 0)
+        bounds[dev] = (start, start + size)
+        start += size
+    return bounds

@@ -1,7 +1,9 @@
-from repro.serve.engine import (RECOMPILE, RESIDENT, Completion, Request,
-                                ServeConfig, ServeEngine, percentile,
-                                reference_decode, synthetic_workload)
+from repro.serve.engine import (RECOMPILE, RESIDENT, Completion, FleetConfig,
+                                FleetServeEngine, Request, ServeConfig,
+                                ServeEngine, percentile, reference_decode,
+                                synthetic_workload)
 
 __all__ = ["ServeConfig", "ServeEngine", "Request", "Completion",
            "RECOMPILE", "RESIDENT", "reference_decode",
-           "synthetic_workload", "percentile"]
+           "synthetic_workload", "percentile", "FleetConfig",
+           "FleetServeEngine"]

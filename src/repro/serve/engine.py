@@ -21,13 +21,24 @@ failover modes mirror the paper's two mechanisms:
 Decoded tokens are bit-identical across routings and across batching
 schedules because the lowerings are Viscosity-equivalent and every slot is
 an independent lane (the tests assert both).
+
+The fleet layer (paper §II Fig. 2, §V Fig. 8) stacks on the same engine:
+``FleetServeEngine`` runs one slot pool per *device*, scheduling admissions
+across the per-device pools, with every device consulting its own
+``RoutingPlan`` out of a shared ``FleetPlan``.  The pools share one pair of
+Dispatchers, so two devices with the same routing share compiled
+executables (the FleetPlan compile-key multiset).  A faulted device's work
+migrates to a hot spare when one is free (its in-flight slots drain and
+re-admit — greedy decode makes the re-decoded tokens bit-identical);
+otherwise the device degrades in place exactly like the single-device
+engine.
 """
 from __future__ import annotations
 
 import collections
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +47,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.fault import FaultState
 from repro.core.oobleck import Dispatcher
-from repro.core.routing import RoutingPlan
+from repro.core.routing import FleetPlan, RoutingPlan
 from repro.models import build_model
 from repro.train.runner import model_stage_names
 from repro.viscosity import REGISTRY, SW
@@ -76,6 +87,7 @@ class _Slot:
     out: List[int]
     admitted_step: int
     eligible_wall: float
+    req: Optional[Request] = None    # original request (fleet drain/requeue)
 
 
 @dataclass
@@ -87,9 +99,17 @@ class ServeConfig:
 
 
 class ServeEngine:
-    """Continuous-batching engine; all routing flows through RoutingPlan."""
+    """Continuous-batching engine; all routing flows through RoutingPlan.
 
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+    Slot-pool state lives on the instance (``reset_pool`` / ``admit`` /
+    ``decode_tick`` / ``drain``), so the same pool machinery serves both
+    the single-device ``serve`` loop and the per-device workers of
+    ``FleetServeEngine``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig, *,
+                 dispatchers: Optional[Tuple[Dispatcher, Dispatcher]] = None,
+                 template: Optional["ServeEngine"] = None):
         if scfg.failover not in (RECOMPILE, RESIDENT):
             raise ValueError(f"unknown failover mode {scfg.failover!r}; "
                              f"expected {RECOMPILE!r} or {RESIDENT!r}")
@@ -98,20 +118,56 @@ class ServeEngine:
         self.scfg = scfg
         self.fault_state = FaultState()
         self.stage_names = model_stage_names(cfg)
-        # Route-free model instance, used only for cache/shape structure.
-        self._shape_model = build_model(cfg)
-        self._prefill = Dispatcher(self._build_prefill)
-        self._decode = Dispatcher(self._build_decode)
-        # Zero KV template, shared by every admission (prefill does not
-        # donate its inputs, so one allocation serves the engine lifetime).
-        self._cache0 = self._shape_model.init_cache(1, scfg.max_len)
-        # Donating jitted slot insert: writing a prefilled lane into the
-        # S-slot pool must not copy the whole pool per admission.
-        self._insert = jax.jit(
-            lambda full, one, i: jax.tree_util.tree_map(
-                lambda f, o: jax.lax.dynamic_update_index_in_dim(f, o, i, 0),
-                full, one),
-            donate_argnums=(0,))
+        if dispatchers is None:
+            self._prefill = Dispatcher(self._build_prefill)
+            self._decode = Dispatcher(self._build_decode)
+        else:                        # fleet workers share one compile cache
+            self._prefill, self._decode = dispatchers
+        if template is not None:
+            # Fleet workers share the route-free shape model, the zero KV
+            # template, and the jitted slot insert — only pool *state* is
+            # per-device (jit caches are per-function-instance, so a
+            # private _insert would recompile once per worker).
+            self._shape_model = template._shape_model
+            self._cache0 = template._cache0
+            self._insert = template._insert
+        else:
+            # Route-free model instance, for cache/shape structure only.
+            self._shape_model = build_model(cfg)
+            # Zero KV template, shared by every admission (prefill does
+            # not donate its inputs, so one allocation serves the engine
+            # lifetime).
+            self._cache0 = self._shape_model.init_cache(1, scfg.max_len)
+            # Donating jitted slot insert: writing a prefilled lane into
+            # the S-slot pool must not copy the whole pool per admission.
+            self._insert = jax.jit(
+                lambda full, one, i: jax.tree_util.tree_map(
+                    lambda f, o: jax.lax.dynamic_update_index_in_dim(
+                        f, o, i, 0),
+                    full, one),
+                donate_argnums=(0,))
+        self.reset_pool()
+
+    # --------------------------------------------------------- pool state
+    def reset_pool(self):
+        """Fresh slot pool: no admitted sequences, full capacity."""
+        S = self.scfg.max_slots
+        self._caches = jax.tree_util.tree_map(
+            lambda a: jnp.stack([a] * S), self._cache0)
+        self._toks = jnp.zeros((S, 1, 1), jnp.int32)
+        self._tvec = jnp.zeros((S,), jnp.int32)
+        self._slots: List[Optional[_Slot]] = [None] * S
+        self.capacity = S            # admission ceiling (fleet degradation)
+
+    def occupancy(self) -> int:
+        return sum(sl is not None for sl in self._slots)
+
+    def has_free_slot(self) -> bool:
+        return (self.occupancy() < self.capacity
+                and any(sl is None for sl in self._slots))
+
+    def active_slots(self) -> List[int]:
+        return [i for i, sl in enumerate(self._slots) if sl is not None]
 
     # ------------------------------------------------------------- plans
     def plan(self) -> RoutingPlan:
@@ -197,16 +253,91 @@ class ServeEngine:
                     f"({r.max_new_tokens}) exceeds max_len "
                     f"{self.scfg.max_len}")
 
-    def _admit(self, req: Request, i: int, caches, toks, tvec):
+    def admit(self, req: Request, step: int, eligible_wall: float,
+              completions: Dict[int, Completion]) -> int:
+        """Prefill ``req`` into the lowest free slot (caller checks
+        ``has_free_slot``); single-token requests complete immediately.
+        Returns the number of tokens emitted (always 1: the prefill
+        argmax)."""
+        i = next(idx for idx, sl in enumerate(self._slots) if sl is None)
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         P = prompt.shape[1]
         logits, cache = self._run_prefill(
             self.params, {"tokens": prompt, "cache": self._cache0})
         first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)   # (1,)
-        caches = self._insert(caches, cache, jnp.int32(i))
-        toks = toks.at[i].set(first[:, None])
-        tvec = tvec.at[i].set(P)
-        return caches, toks, tvec, int(first[0])
+        self._caches = self._insert(self._caches, cache, jnp.int32(i))
+        self._toks = self._toks.at[i].set(first[:, None])
+        self._tvec = self._tvec.at[i].set(P)
+        self._slots[i] = _Slot(rid=req.rid, prompt_len=len(req.prompt),
+                               arrival=req.arrival,
+                               remaining=req.max_new_tokens - 1,
+                               out=[int(first[0])], admitted_step=step,
+                               eligible_wall=eligible_wall, req=req)
+        if self._slots[i].remaining == 0:         # single-token request
+            self._finish(self._slots, i, step, completions)
+        return 1
+
+    # ------------------------------------------------------------- ticks
+    def decode_tick(self, step: int,
+                    completions: Dict[int, Completion]) -> Dict[str, Any]:
+        """One vmapped decode step across the pool; appends a token to
+        every active slot, evicts finished sequences.  Returns per-tick
+        metrics (``active`` = 0 means the pool was idle: no decode ran)."""
+        active = self.active_slots()
+        if not active:
+            return {"active": 0, "dt": 0.0, "key": None, "tokens": 0}
+        key = self._decode_key()
+        fn = self._decode.get(key)
+        t0 = time.perf_counter()
+        if self.scfg.failover == RESIDENT:
+            logits, self._caches = fn(self.params, self._caches, self._toks,
+                                      self._tvec, self.health_mask())
+        else:
+            logits, self._caches = fn(self.params, self._caches, self._toks,
+                                      self._tvec)
+        nxt = jnp.argmax(logits[:, 0, -1], -1).astype(jnp.int32)      # (S,)
+        nxt.block_until_ready()
+        dt = time.perf_counter() - t0
+        self._toks = nxt[:, None, None]
+        S = self.scfg.max_slots
+        active_mask = np.zeros((S,), np.int32)
+        active_mask[active] = 1
+        self._tvec = self._tvec + jnp.asarray(active_mask)
+        nxt_np = np.asarray(nxt)
+        for i in active:
+            sl = self._slots[i]
+            sl.out.append(int(nxt_np[i]))
+            sl.remaining -= 1
+            if sl.remaining == 0:                 # evict finished
+                self._finish(self._slots, i, step, completions)
+        return {"active": len(active), "dt": dt, "key": key,
+                "tokens": len(active)}
+
+    def drain(self) -> List[Request]:
+        """Evict every in-flight sequence and hand back the original
+        requests for re-admission elsewhere (fleet migration).  Partial
+        outputs are discarded — greedy decode makes the re-decoded tokens
+        bit-identical to an uninterrupted run."""
+        drained = [sl.req for sl in self._slots
+                   if sl is not None and sl.req is not None]
+        for i in range(len(self._slots)):
+            self._slots[i] = None
+        return drained
+
+    def drain_excess(self) -> List[Request]:
+        """Evict just enough in-flight sequences to fit a reduced
+        capacity (fleet degradation), youngest first — the least
+        re-decoded work is thrown away."""
+        excess = self.occupancy() - self.capacity
+        if excess <= 0:
+            return []
+        victims = sorted(self.active_slots(),
+                         key=lambda i: len(self._slots[i].out))[:excess]
+        out = [self._slots[i].req for i in victims
+               if self._slots[i].req is not None]
+        for i in victims:
+            self._slots[i] = None
+        return out
 
     # -------------------------------------------------------------- run
     def serve(self, requests: Sequence[Request], *,
@@ -218,16 +349,10 @@ class ServeEngine:
         engine step ``k`` (admissions and the decode tick at ``k`` already
         run rerouted).  Returns ({rid: Completion}, stats).
         """
-        scfg = self.scfg
-        S = scfg.max_slots
         self._validate(requests)
+        self.reset_pool()
         queue = collections.deque(
             sorted(requests, key=lambda r: (r.arrival, r.rid)))
-        caches = jax.tree_util.tree_map(lambda a: jnp.stack([a] * S),
-                                        self._cache0)
-        toks = jnp.zeros((S, 1, 1), jnp.int32)
-        tvec = jnp.zeros((S,), jnp.int32)
-        slots: List[Optional[_Slot]] = [None] * S
         eligible_wall: Dict[int, float] = {}
         completions: Dict[int, Completion] = {}
         decode_keys = set()
@@ -235,7 +360,7 @@ class ServeEngine:
         stats: Dict[str, Any] = {"step_times": [], "occupancy": [],
                                  "admitted": 0, "steps": 0}
         step = 0
-        while queue or any(sl is not None for sl in slots):
+        while queue or self.occupancy():
             if fault_at_step is not None and step == fault_at_step[0]:
                 self.inject_fault(fault_at_step[1])
             now = time.perf_counter()
@@ -243,48 +368,19 @@ class ServeEngine:
                 if r.arrival <= step and r.rid not in eligible_wall:
                     eligible_wall[r.rid] = now
             # admission: arrived requests claim free slots (join)
-            for i in range(S):
-                if slots[i] is None and queue and queue[0].arrival <= step:
-                    req = queue.popleft()
-                    caches, toks, tvec, first = self._admit(
-                        req, i, caches, toks, tvec)
-                    slots[i] = _Slot(rid=req.rid, prompt_len=len(req.prompt),
-                                     arrival=req.arrival,
-                                     remaining=req.max_new_tokens - 1,
-                                     out=[first], admitted_step=step,
-                                     eligible_wall=eligible_wall.get(req.rid,
-                                                                     now))
-                    stats["admitted"] += 1
-                    if slots[i].remaining == 0:       # single-token request
-                        self._finish(slots, i, step, completions)
-            active = [i for i in range(S) if slots[i] is not None]
-            if not active:
+            while (self.has_free_slot() and queue
+                   and queue[0].arrival <= step):
+                req = queue.popleft()
+                self.admit(req, step, eligible_wall.get(req.rid, now),
+                           completions)
+                stats["admitted"] += 1
+            tick = self.decode_tick(step, completions)
+            if tick["active"] == 0:
                 step += 1            # idle tick: waiting on future arrivals
                 continue
-            key = self._decode_key()
-            fn = self._decode.get(key)
-            decode_keys.add(key)
-            t0 = time.perf_counter()
-            if scfg.failover == RESIDENT:
-                logits, caches = fn(self.params, caches, toks, tvec,
-                                    self.health_mask())
-            else:
-                logits, caches = fn(self.params, caches, toks, tvec)
-            nxt = jnp.argmax(logits[:, 0, -1], -1).astype(jnp.int32)  # (S,)
-            nxt.block_until_ready()
-            stats["step_times"].append(time.perf_counter() - t0)
-            stats["occupancy"].append(len(active))
-            toks = nxt[:, None, None]
-            active_mask = np.zeros((S,), np.int32)
-            active_mask[active] = 1
-            tvec = tvec + jnp.asarray(active_mask)
-            nxt_np = np.asarray(nxt)
-            for i in active:
-                sl = slots[i]
-                sl.out.append(int(nxt_np[i]))
-                sl.remaining -= 1
-                if sl.remaining == 0:                 # evict finished
-                    self._finish(slots, i, step, completions)
+            decode_keys.add(tick["key"])
+            stats["step_times"].append(tick["dt"])
+            stats["occupancy"].append(tick["active"])
             step += 1
         stats["steps"] = step
         stats["recompiles"] = max(0, len(decode_keys) - 1)
@@ -320,6 +416,217 @@ class ServeEngine:
         completions, stats = self.serve(reqs, fault_at_step=fault_at_step)
         toks = np.stack([completions[i].tokens for i in range(B)])
         return toks, stats
+
+
+# ==========================================================================
+# Fleet layer (paper §II Fig. 2, §V Fig. 8)
+# ==========================================================================
+@dataclass
+class FleetConfig:
+    """Fleet shape + degradation policy for ``FleetServeEngine``.
+
+    ``degradation[k]`` is the relative capacity of a device carrying ``k``
+    fallback-routed stages (the paper's VFA throughput curve); ``None``
+    keeps every serving device at full slot capacity.  Capacity is
+    quantized to whole slots (``capacity_for``) — the fleet harness uses
+    the same quantization on the analytic side, so measured-vs-analytic
+    comparisons are slot-exact."""
+
+    n_devices: int = 2
+    n_spares: int = 0
+    degradation: Optional[Sequence[float]] = None
+
+    def capacity_for(self, n_faults: int, max_slots: int) -> int:
+        if self.degradation is None:
+            return max_slots
+        deg = list(self.degradation)
+        f = deg[min(n_faults, len(deg) - 1)]
+        return max(0, int(round(max_slots * f)))
+
+
+class FleetServeEngine:
+    """Device-indexed serve fleet: one slot pool per device, all consulting
+    a shared ``FleetPlan``.
+
+    Admission scans the serving devices in index order and places the
+    queue head on the first device with free capacity; a quarantined
+    device's pool drains and its requests re-admit (on its hot spare when
+    the pool has one — Fig. 8 — otherwise on whatever capacity survives).
+    The per-device pools share one Dispatcher pair, so devices with equal
+    RoutingPlans share compiled executables.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 fcfg: FleetConfig):
+        if fcfg.n_devices < 1:
+            raise ValueError(f"fleet needs >= 1 device, got {fcfg.n_devices}")
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.fcfg = fcfg
+        self.stage_names = model_stage_names(cfg)
+        self.fleet = FleetPlan.healthy(fcfg.n_devices, self.stage_names,
+                                       target=scfg.hw_route,
+                                       n_spares=fcfg.n_spares)
+        self.workers: List[ServeEngine] = []
+        shared: Optional[Tuple[Dispatcher, Dispatcher]] = None
+        for _ in range(fcfg.n_devices):
+            w = ServeEngine(cfg, params, scfg, dispatchers=shared,
+                            template=self.workers[0] if self.workers
+                            else None)
+            if shared is None:
+                shared = (w._prefill, w._decode)
+            self.workers.append(w)
+        self._prefill, self._decode = shared
+        self.event_log: List[dict] = []
+        self._sync_capacity()
+
+    # ----------------------------------------------------- fleet health
+    def _sync_capacity(self):
+        serving = set(self.fleet.serving())
+        for d, w in enumerate(self.workers):
+            if d in serving:
+                w.capacity = self.fcfg.capacity_for(
+                    self.fleet.n_faults(d), self.scfg.max_slots)
+            else:
+                w.capacity = 0
+
+    def _apply(self, event: Tuple, step: int) -> List[Request]:
+        """Apply one fault event to the FleetPlan; returns requests drained
+        from newly-quarantined devices (for re-admission)."""
+        kind, device = event[0], event[1]
+        before = set(self.fleet.quarantined)
+        if kind == "stage":
+            stage = event[2]
+            if stage not in self.stage_names:
+                raise ValueError(f"unknown stage {stage!r}; this model's "
+                                 f"stages: {self.stage_names}")
+            self.fleet = self.fleet.with_stage_fault(device, stage)
+            self.workers[device].fault_state.mark(stage, 0, kind="injected")
+        elif kind == "device":
+            self.fleet = self.fleet.with_device_fault(device)
+        elif kind == "recover":
+            spare = self.fleet.pool.spare_for(device)
+            self.fleet = self.fleet.with_recovery(
+                device, self.stage_names, target=self.scfg.hw_route)
+            self.workers[device].fault_state = FaultState()  # fresh hardware
+            if spare is not None:    # spare returns to the idle pool; its
+                drained = self.workers[spare].drain()   # slots re-admit on
+                self.event_log.append({"step": step, "event": event,
+                                       "drained": len(drained)})
+                self._sync_capacity()   # the recovered device
+                return drained
+        else:
+            raise ValueError(f"unknown fleet event kind {kind!r}")
+        newly_gone = set(self.fleet.quarantined) - before
+        drained: List[Request] = []
+        for d in sorted(newly_gone):
+            drained.extend(self.workers[d].drain())
+        self.event_log.append({"step": step, "event": event,
+                               "drained": len(drained)})
+        self._sync_capacity()
+        return drained
+
+    # convenience wrappers (usable between serve() calls or via events)
+    def inject_stage_fault(self, device: int, stage: str):
+        return self._apply(("stage", device, stage), step=-1)
+
+    def inject_device_fault(self, device: int):
+        return self._apply(("device", device), step=-1)
+
+    def recover(self, device: int):
+        return self._apply(("recover", device), step=-1)
+
+    # -------------------------------------------------------------- run
+    def serve(self, requests: Sequence[Request], *,
+              events: Optional[Mapping[int, Sequence[Tuple]]] = None
+              ) -> Tuple[Dict[int, Completion], Dict[str, Any]]:
+        """Run a workload to completion across the fleet.
+
+        ``events[k]`` is a list of fault events applied just before engine
+        step ``k``: ``("stage", device, stage_name)``,
+        ``("device", device)``, or ``("recover", device)``.  No request is
+        ever dropped: draining re-queues at the front, and completions are
+        bit-identical to the healthy single-device reference (greedy
+        decode + Viscosity equivalence).
+        """
+        self.workers[0]._validate(requests)
+        for w in self.workers:
+            w.reset_pool()
+        self._sync_capacity()
+        events = dict(events or {})
+        queue = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        eligible_wall: Dict[int, float] = {}
+        completions: Dict[int, Completion] = {}
+        prefill0 = self._prefill.compiles
+        decode0 = self._decode.compiles
+        stats: Dict[str, Any] = {
+            "admitted": 0, "steps": 0, "requeued": 0,
+            "per_step_tokens": [], "occupancy": [], "capacity": [],
+            "per_device_tokens": [0] * self.fcfg.n_devices}
+        step = 0
+        while queue or any(w.occupancy() for w in self.workers):
+            step_tokens = 0
+            step_events = events.pop(step, ())
+            drained: List[Request] = []
+            for ev in step_events:
+                drained.extend(self._apply(ev, step))
+            if step_events:
+                # degradation shrank some pools: drain the overflow too,
+                # so capacity changes take effect this step, not after the
+                # old residents happen to finish
+                for d in self.fleet.serving():
+                    drained.extend(self.workers[d].drain_excess())
+            if drained:
+                stats["requeued"] += len(drained)
+                queue.extendleft(sorted(drained,
+                                        key=lambda r: (r.arrival, r.rid),
+                                        reverse=True))
+            now = time.perf_counter()
+            for r in queue:
+                if r.arrival <= step and r.rid not in eligible_wall:
+                    eligible_wall[r.rid] = now
+            # admission: queue head goes to the first device with capacity
+            serving = self.fleet.serving()
+            for d in serving:
+                w = self.workers[d]
+                while (w.has_free_slot() and queue
+                       and queue[0].arrival <= step):
+                    req = queue.popleft()
+                    step_tokens += w.admit(
+                        req, step, eligible_wall.get(req.rid, now),
+                        completions)
+                    stats["admitted"] += 1
+                    stats["per_device_tokens"][d] += 1
+            occupancy = 0
+            for d in serving:
+                tick = self.workers[d].decode_tick(step, completions)
+                occupancy += tick["active"]
+                step_tokens += tick["tokens"]
+                stats["per_device_tokens"][d] += tick["tokens"]
+            stats["per_step_tokens"].append(step_tokens)
+            stats["occupancy"].append(occupancy)
+            stats["capacity"].append(sum(self.workers[d].capacity
+                                         for d in serving))
+            step += 1
+            if step > 100_000:
+                raise RuntimeError("fleet serve did not converge (queue "
+                                   f"{len(queue)}, occupancy {occupancy})")
+        # Events scheduled past the drain point still change fleet health
+        # (a recovery at step 40 must not be silently lost because the
+        # workload finished at 35) — apply them now, in step order; no
+        # slots are occupied, so nothing drains.
+        for s in sorted(events):
+            for ev in events[s]:
+                self._apply(ev, step=s)
+        stats["late_events"] = sum(len(v) for v in events.values())
+        stats["steps"] = step
+        stats["decode_compiles"] = self._decode.compiles - decode0
+        stats["prefill_compiles"] = self._prefill.compiles - prefill0
+        stats["quarantined"] = list(self.fleet.quarantined)
+        stats["spares_in_service"] = list(self.fleet.pool.in_service())
+        return completions, stats
 
 
 def percentile(xs: Sequence[float], q: float) -> float:

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,9 +33,10 @@ from repro.configs.base import ModelConfig
 from repro.core.fault import (CanaryChecker, FaultSignature, FaultState,
                               StepGuard, StragglerWatchdog)
 from repro.core.oobleck import Dispatcher
-from repro.core.routing import RoutingPlan
+from repro.core.routing import FleetPlan, RoutingPlan
 from repro.core.stage import Stage
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.sharding import shard_bounds
 from repro.models import build_model
 from repro.viscosity import INTERPRET, REGISTRY, SW
 
@@ -220,3 +221,132 @@ class TrainRunner:
         if self.ckpt:
             self.ckpt.wait()
         return params, opt_state, err
+
+
+# ==========================================================================
+# Fleet layer (paper §II Fig. 2, §V Fig. 8): data-parallel steps where each
+# shard consults its own RoutingPlan out of a shared FleetPlan.
+# ==========================================================================
+@dataclass
+class FleetTrainConfig:
+    n_devices: int = 2
+    n_spares: int = 0
+
+
+class FleetTrainRunner:
+    """Data-parallel training across a device-indexed fleet.
+
+    Per step the global batch shards across the FleetPlan's *serving*
+    devices (``launch.sharding.shard_bounds`` — quarantined devices and
+    idle spares get no slice); each shard's gradients come from an
+    executable keyed by that shard's own ``RoutingPlan`` in one shared
+    Dispatcher, so devices with equal routing share a single compile.
+    Detection follows the Oobleck loop per shard: a non-finite shard loss
+    quarantines that device (detect), its work migrates to a hot spare
+    when one is free (Fig. 8) or its slice redistributes over the
+    survivors (quarantine -> migrate-or-reroute), and the step re-runs
+    (continue).  Stage-level faults reroute only the faulted device's
+    plan — the other shards keep their fully-fused fast path.
+    """
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                 tcfg: TrainConfig, data: SyntheticLM,
+                 fcfg: FleetTrainConfig):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data = data
+        self.fcfg = fcfg
+        self.stage_names = model_stage_names(cfg)
+        self.fleet = FleetPlan.healthy(fcfg.n_devices, self.stage_names,
+                                       target=tcfg.hw_route,
+                                       n_spares=fcfg.n_spares)
+        self.dispatcher = Dispatcher(self._build_grads)
+        self.guard_trips = 0
+        self.history: List[Dict[str, float]] = []
+        self._update = jax.jit(
+            lambda grads, opt_state, params: optim.update(
+                self.opt_cfg, grads, opt_state, params))
+
+    # ------------------------------------------------------------ build
+    def _build_grads(self, plan: RoutingPlan) -> Callable:
+        model = build_model(self.cfg, routes=plan)
+
+        def grads_fn(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.forward, has_aux=True)(params, batch)
+            return grads, loss, metrics
+
+        return jax.jit(grads_fn)
+
+    # ------------------------------------------------------------ state
+    def init_state(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(self.tcfg.seed)
+        params = build_model(self.cfg).init(key)
+        return params, optim.init(params)
+
+    def inject_stage_fault(self, device: int, stage: str):
+        if stage not in self.stage_names:
+            raise ValueError(f"unknown stage {stage!r}; this model's stages:"
+                             f" {self.stage_names}")
+        self.fleet = self.fleet.with_stage_fault(device, stage)
+
+    def inject_device_fault(self, device: int):
+        self.fleet = self.fleet.with_device_fault(device)
+
+    # -------------------------------------------------------------- run
+    def _shard_step(self, params, batch, poison_device: Optional[int]):
+        """Grads per serving shard; returns (avg_grads, metrics, tripped)
+        where ``tripped`` is the first device whose shard failed the
+        StepGuard (None when the step is clean)."""
+        B = batch["tokens"].shape[0]
+        bounds = shard_bounds(B, self.fleet.device_mask())
+        total = jax.tree_util.tree_map(jnp.zeros_like, params)
+        losses, n_rows = [], 0
+        for d, (lo, hi) in bounds.items():
+            if hi == lo:
+                continue
+            shard = {k: v[lo:hi] for k, v in batch.items()}
+            fn = self.dispatcher.get(self.fleet.plan_for(d))
+            grads, loss, metrics = fn(params, shard)
+            if d == poison_device:       # emulated datapath blowup
+                loss = loss * jnp.nan
+            if not StepGuard.ok({"loss": loss, "grads": grads}):
+                return None, {"device": d}, d
+            w = float(hi - lo)
+            total = jax.tree_util.tree_map(
+                lambda t, g: t + w * g, total, grads)
+            losses.append(w * float(loss))
+            n_rows += hi - lo
+        avg = jax.tree_util.tree_map(lambda t: t / n_rows, total)
+        return avg, {"loss": sum(losses) / n_rows}, None
+
+    def run(self, params, opt_state, *, steps: Optional[int] = None,
+            poison: Optional[Mapping[int, int]] = None):
+        """``poison[step] = device`` injects a non-finite shard loss at
+        that step (the detect -> quarantine -> migrate loop, test-drivable
+        without real broken silicon)."""
+        steps = steps if steps is not None else self.tcfg.steps
+        poison = dict(poison or {})
+        step_i = 0
+        while step_i < steps:
+            batch = self.data.device_batch(step_i)
+            t0 = time.perf_counter()
+            grads, metrics, tripped = self._shard_step(
+                params, batch, poison.get(step_i))
+            if tripped is not None:
+                # detect -> quarantine; migrate-to-spare when the pool has
+                # one, else the survivors absorb the slice; re-run.
+                self.guard_trips += 1
+                poison.pop(step_i, None)     # the bad device is now gone
+                self.fleet = self.fleet.with_device_fault(tripped)
+                continue
+            params, opt_state, om = self._update(grads, opt_state, params)
+            self.history.append({
+                "step": step_i, "loss": metrics["loss"],
+                "dt": time.perf_counter() - t0,
+                "n_serving": len(self.fleet.serving()),
+                "n_quarantined": len(self.fleet.quarantined),
+                "compiles": self.dispatcher.compiles})
+            step_i += 1
+        return params, opt_state

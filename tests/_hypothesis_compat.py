@@ -1,33 +1,113 @@
 """Optional-hypothesis shim (see requirements-dev.txt).
 
-Property tests use hypothesis when it is installed (CI installs it);
-without it, only the ``@given`` tests skip — every plain test in the
-same module still runs.  Import from test modules as::
+Property tests use hypothesis when it is installed (CI installs it via
+requirements-dev.txt, so the real shrinking engine runs there).  Without
+it, a deterministic mini engine stands in: each strategy draws from a
+seeded PRNG and ``@given`` runs ``max_examples`` sampled cases — the
+property tests *run* everywhere instead of skipping, they just lose
+shrinking and the adversarial corner-case heuristics.  Import from test
+modules as::
 
     from _hypothesis_compat import given, settings, st
 
 (tests/conftest.py puts this directory on sys.path for the whole tree).
 """
-import pytest
+import functools
+import inspect
+import random
 
 try:
     from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
 except ImportError:
-    class _MissingStrategy:
-        """Chainable stand-in: any attribute access or call returns
-        itself, so module-level strategy expressions still evaluate."""
+    HAVE_HYPOTHESIS = False
 
-        def __getattr__(self, name):
-            return self
+    _DEFAULT_MAX_EXAMPLES = 20
 
-        def __call__(self, *a, **k):
-            return self
+    class _Strategy:
+        """One sampleable strategy: ``draw(rng)`` produces a value."""
 
-    st = _MissingStrategy()
+        def __init__(self, draw):
+            self._draw = draw
 
-    def settings(*a, **k):
-        return lambda f: f
+        def draw(self, rng):
+            return self._draw(rng)
 
-    def given(*a, **k):
-        return lambda f: pytest.mark.skip(
-            reason="hypothesis not installed")(f)
+    class _St:
+        """The subset of ``hypothesis.strategies`` the repo's property
+        tests use.  Bounds are inclusive, matching hypothesis."""
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(
+                len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.draw(rng)
+                                               for s in strategies))
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Outer decorator: records max_examples on the given-wrapper."""
+
+        def deco(f):
+            f._hc_max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(**strategies):
+        """Keyword-strategy ``@given``: runs the test on deterministic
+        samples (seeded per test name, so failures reproduce)."""
+
+        def deco(f):
+
+            @functools.wraps(f)
+            def wrapper(*args, **kw):
+                n = getattr(wrapper, "_hc_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(f.__qualname__)
+                for i in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategies.items()}
+                    try:
+                        f(*args, **kw, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {i + 1}/{n}: "
+                            f"{drawn!r}") from e
+
+            # pytest must not see the strategy parameters as fixtures:
+            # expose only the non-strategy params (real fixtures) in the
+            # wrapper's signature, exactly like hypothesis does.
+            sig = inspect.signature(f)
+            fixture_params = [p for name, p in sig.parameters.items()
+                              if name not in strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            return wrapper
+
+        return deco

@@ -6,10 +6,13 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 # Make tests/ importable from every test dir (incl. tests/kernels/) so the
-# shared _hypothesis_compat shim is a single module, not nine copies.
+# shared _hypothesis_compat shim is a single module, not nine copies; the
+# repo root rides along so tests can drive the benchmarks package (the
+# fleet acceptance test reuses the fleet_bench scenario).
 _here = os.path.dirname(__file__)
-if _here not in sys.path:
-    sys.path.insert(0, _here)
+for _p in (_here, os.path.dirname(_here)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import numpy as np
 import pytest

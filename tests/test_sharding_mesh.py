@@ -17,7 +17,10 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    os.environ.pop("JAX_PLATFORMS", None)
+    # Pin the CPU backend: popping JAX_PLATFORMS makes jax probe the TPU
+    # backend first, which burns minutes on metadata retries off-TPU (the
+    # probe fails and falls back to CPU anyway).
+    os.environ["JAX_PLATFORMS"] = "cpu"
     import json
     import jax, jax.numpy as jnp
     import numpy as np
@@ -55,3 +58,100 @@ def test_small_mesh_compile_and_collectives():
         assert rec["temp"] > 0
     # the TP'd train step must communicate (all-reduce over model axis)
     assert sum(out["gemma3-1b"]["coll"].values()) > 0
+
+
+def test_mesh_shortfall_error_names_the_gap():
+    """Regression: the device-count error must name the actual shortfall,
+    not just the totals (this process has exactly one CPU device)."""
+    from repro.launch.mesh import make_mesh
+
+    with pytest.raises(RuntimeError, match=r"short 7 device\(s\)"):
+        make_mesh((2, 4), ("data", "model"))
+
+
+def test_shard_bounds_covers_batch_and_skips_masked():
+    from repro.launch.sharding import shard_bounds
+
+    bounds = shard_bounds(10, [True, False, True, True])
+    assert sorted(bounds) == [0, 2, 3]                 # device 1 masked out
+    sizes = {d: hi - lo for d, (lo, hi) in bounds.items()}
+    assert sum(sizes.values()) == 10
+    assert max(sizes.values()) - min(sizes.values()) <= 1
+    spans = sorted(bounds.values())
+    assert spans[0][0] == 0 and spans[-1][1] == 10     # contiguous cover
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c
+    with pytest.raises(ValueError):
+        shard_bounds(4, [False, False])
+
+
+def test_fleet_mesh_view_masks_and_errors():
+    """FleetMeshView carries quarantined/spare devices explicitly and the
+    submesh error names how many serving devices are missing."""
+    from repro.core.routing import FleetPlan
+    from repro.launch.mesh import FleetMeshView
+
+    fp = FleetPlan.healthy(4, ["flash_attention"], n_spares=1)
+    view = FleetMeshView.from_plan(fp.with_device_fault(1))
+    assert view.mask == (True, False, True, True)      # spare 3 activated
+    assert view.quarantined == (1,)
+    assert view.idle_spares == ()
+    # this process has 1 device; a 3-serving-device view cannot be built
+    with pytest.raises(RuntimeError, match="short"):
+        view.serving_devices()
+
+
+FLEET_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    # Pin the CPU backend: popping JAX_PLATFORMS makes jax probe the TPU
+    # backend first, which burns minutes on metadata retries off-TPU.
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.routing import FleetPlan
+    from repro.launch.mesh import FleetMeshView
+    from repro.launch.sharding import shard_bounds
+
+    # 8 host devices: 6 workers + 2 spares; one device fault migrates to a
+    # spare, a second (pool now holding one) also migrates.
+    fp = FleetPlan.healthy(8, ["flash_attention"], n_spares=2)
+    fp = fp.with_device_fault(1).with_device_fault(4)
+    view = FleetMeshView.from_plan(fp)
+    mesh = view.submesh(("data", "model"), model=2)
+    bounds = shard_bounds(12, view.mask)
+
+    # a sharded psum across the health-masked mesh really runs
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x = jax.device_put(jnp.arange(12.0), NamedSharding(mesh, P("data")))
+    total = jax.jit(lambda v: jnp.sum(v))(x)
+    print(json.dumps({
+        "mask": list(view.mask), "quarantined": list(view.quarantined),
+        "idle": list(view.idle_spares),
+        "mesh_shape": list(mesh.devices.shape),
+        "mesh_devices": sorted(int(d.id) for d in mesh.devices.flat),
+        "bounds": {str(k): v for k, v in bounds.items()},
+        "total": float(total)}))
+""")
+
+
+@pytest.mark.slow
+def test_health_masked_mesh_view_8_devices():
+    """The fleet mesh view on the 8-device CPU dry-run: quarantined
+    devices fall out of the mesh, activated spares join it, and sharded
+    computation runs on exactly the serving devices."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    res = subprocess.run([sys.executable, "-c", FLEET_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    # workers 0,2,3,5 + both spares (6, 7) serve; 1 and 4 are out
+    assert out["mask"] == [True, False, True, True, False, True, True,
+                           True]
+    assert out["quarantined"] == [1, 4]
+    assert out["idle"] == []
+    assert out["mesh_shape"] == [3, 2]
+    assert out["mesh_devices"] == [0, 2, 3, 5, 6, 7]
+    assert set(map(int, out["bounds"])) == {0, 2, 3, 5, 6, 7}
+    assert out["total"] == sum(range(12))
