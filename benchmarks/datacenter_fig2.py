@@ -3,14 +3,14 @@ from __future__ import annotations
 
 import time
 
-from repro.core.datacenter import (expected_replacements, expected_throughput,
-                                   fig2_sweep, simulate_fleet)
+from repro.core.datacenter import (expected_replacements, fig2_sweep,
+                                   simulate_fleet)
 
 RATES = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5, 1e-6, 1e-7]
 DEG = (1.0, 0.38, 0.19)    # FFT case-study degradation curve
 
 
-def run():
+def run(seed: int = 0):
     rows = []
     t0 = time.perf_counter()
     table = fig2_sweep(RATES, degradation=DEG)
@@ -26,7 +26,17 @@ def run():
                  f"{expected_replacements(10_000, 1460, 1e-5, 3):.4f}"))
     # Monte-Carlo cross-check at one rate
     t0 = time.perf_counter()
-    mc = simulate_fleet(10_000, 1460, 1e-4, mode="vfa", degradation=DEG)
+    mc = simulate_fleet(10_000, 1460, 1e-4, mode="vfa", degradation=DEG,
+                        seed=seed)
     dt = (time.perf_counter() - t0) * 1e6
     rows.append(("fig2_mc_vfa_repl@1e-4", dt, f"{mc.replacements:.0f}"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="Monte-Carlo cross-check seed")
+    for row in run(seed=ap.parse_args().seed):
+        print("%s,%.1f,%s" % row)

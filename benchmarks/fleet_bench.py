@@ -9,10 +9,16 @@ number, not just the analytic claim.
 
 ``python benchmarks/fleet_bench.py`` prints one JSON object (CI smoke
 asserts it parses); ``run()`` returns the usual ``name,us_per_call,
-derived`` rows for ``benchmarks/run.py``.
+derived`` rows for ``benchmarks/run.py``.  ``--hosts N`` adds the
+multi-host axis (the CI multihost smoke runs ``--hosts 2``): devices
+partition into per-host blocks, a mid-horizon host loss drops one whole
+block, and the analytic twin replays the same event log — so the
+measured-vs-analytic closure covers host-level failure too.  ``--seed``
+reseeds the Monte-Carlo trace for reproducible CI runs.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -21,6 +27,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.datacenter import FleetHarness, replay_trace, simulate_fleet
+from repro.launch.distributed import HostTopology
 from repro.models import build_model
 from repro.serve import FleetConfig, FleetServeEngine, Request, ServeConfig
 from repro.train.runner import model_stage_names
@@ -45,48 +52,69 @@ def _requests(cfg, rng, n_tokens: int):
             for i in range(max(1, n_tokens // budget))]
 
 
-def run_scenario(n_spares: int):
+def run_scenario(n_spares: int, *, hosts: int = 1, seed: int = SEED):
     """The one scenario definition (CI smoke, the tier-1 acceptance test,
     and examples/datacenter_sim.py --replay all drive this): returns the
     full FleetHarness result dict plus the workload and model, so callers
-    can also assert per-request bit-identity."""
+    can also assert per-request bit-identity.
+
+    ``hosts > 1`` partitions the fleet into host blocks (device count is
+    padded to divide evenly), injects a whole-host loss halfway through
+    the horizon on top of the Monte-Carlo trace, and replays the same
+    event log through both the engine and the analytic twin.
+    """
     cfg = get_config(ARCH).reduced()
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     stages = model_stage_names(cfg)
-    mc = simulate_fleet(N_WORKERS, HORIZON, P_FAULT, max_faults=MAX_FAULTS,
+    if hosts > 1:
+        # pad to a host-divisible fleet; lose host 0 mid-horizon — its
+        # block holds only workers, so with a spare (which lives in the
+        # LAST block) one migrated device crosses the block boundary
+        n_devices = hosts * -(-(N_WORKERS + n_spares) // hosts)
+        n_workers = n_devices - n_spares
+        host_loss = {HORIZON // 2: 0}
+        topology = HostTopology(hosts, n_devices // hosts)
+    else:
+        n_workers, n_devices = N_WORKERS, N_WORKERS + n_spares
+        host_loss = None
+        topology = None
+    mc = simulate_fleet(n_workers, HORIZON, P_FAULT, max_faults=MAX_FAULTS,
                         degradation=DEGRADATION, replace_failed=False,
-                        seed=SEED, record_trace=True)
-    rep = replay_trace(mc.trace, n_workers=N_WORKERS, ticks=HORIZON,
+                        seed=seed, record_trace=True)
+    rep = replay_trace(mc.trace, n_workers=n_workers, ticks=HORIZON,
                        stage_names=stages, degradation=DEGRADATION,
                        max_faults=MAX_FAULTS, n_spares=n_spares,
-                       slots_per_device=SLOTS)
+                       slots_per_device=SLOTS, n_hosts=hosts,
+                       host_loss=host_loss)
     eng = FleetServeEngine(
         cfg, params, ServeConfig(max_len=MAX_LEN, max_slots=SLOTS),
-        FleetConfig(n_devices=N_WORKERS + n_spares, n_spares=n_spares,
-                    degradation=DEGRADATION))
+        FleetConfig(n_devices=n_devices, n_spares=n_spares,
+                    degradation=DEGRADATION, topology=topology))
     rng = np.random.default_rng(1)
-    reqs = _requests(cfg, rng, int(N_WORKERS * SLOTS * HORIZON * 1.5))
+    reqs = _requests(cfg, rng, int(n_workers * SLOTS * HORIZON * 1.5))
     t0 = time.perf_counter()
-    out = FleetHarness(eng, rep, horizon=HORIZON).run(reqs)
+    out = FleetHarness(eng, rep, horizon=HORIZON, num_hosts=hosts).run(reqs)
     out.update(n_spares=n_spares, trace_faults=len(mc.trace),
                wall_s=time.perf_counter() - t0)
     return out, reqs, cfg, params
 
 
-def bench(n_spares: int):
-    out, reqs, _cfg, _params = run_scenario(n_spares)
+def bench(n_spares: int, *, hosts: int = 1, seed: int = SEED):
+    out, reqs, _cfg, _params = run_scenario(n_spares, hosts=hosts,
+                                            seed=seed)
     return {k: out[k] for k in (
-        "n_spares", "trace_faults", "measured_ratio", "analytic_ratio",
-        "rel_err", "healthy_tokens_per_step", "faulted_tokens_per_step",
-        "requeued", "quarantined", "spares_in_service", "wall_s")} | {
+        "num_hosts", "n_spares", "trace_faults", "measured_ratio",
+        "analytic_ratio", "rel_err", "healthy_tokens_per_step",
+        "faulted_tokens_per_step", "requeued", "quarantined",
+        "spares_in_service", "wall_s")} | {
         "completed": len(out["completions"][1])}
 
 
-def run():
+def run(seed: int = SEED):
     """CSV rows for benchmarks/run.py (name, us_per_call, derived)."""
     rows = []
     for n_spares in (0, 1):
-        r = bench(n_spares)
+        r = bench(n_spares, seed=seed)
         rows.append((
             f"fleet_trace_spares{n_spares}",
             1e6 * r["wall_s"] / max(1, r["completed"]),
@@ -96,12 +124,19 @@ def run():
     return rows
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="host blocks; >1 adds a mid-horizon host loss")
+    ap.add_argument("--seed", type=int, default=SEED,
+                    help="Monte-Carlo fault-trace seed")
+    args = ap.parse_args(argv)
     out = {"workload": {"arch": ARCH, "workers": N_WORKERS, "slots": SLOTS,
                         "horizon": HORIZON, "p_fault": P_FAULT,
-                        "degradation": list(DEGRADATION)},
-           "no_spares": bench(0),
-           "hot_spare": bench(1)}
+                        "degradation": list(DEGRADATION),
+                        "hosts": args.hosts, "seed": args.seed},
+           "no_spares": bench(0, hosts=args.hosts, seed=args.seed),
+           "hot_spare": bench(1, hosts=args.hosts, seed=args.seed)}
     print(json.dumps(out, indent=2))
 
 

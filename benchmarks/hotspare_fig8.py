@@ -24,3 +24,13 @@ def run():
     rows.append(("fig8_direct_hotspare_frac_of_full_speed", 0.0,
                  f"{frac:.2f}"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    # accepted for CI uniformity: this bench is closed-form (no RNG)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.parse_args()
+    for row in run():
+        print("%s,%.1f,%s" % row)

@@ -32,8 +32,8 @@ def _wall(fn, *args, n=10, **kw):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run():
-    rng = np.random.default_rng(0)
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
     rows = []
     # attention
     B, S, H, Hkv, D = 2, 512, 8, 2, 64
@@ -94,3 +94,12 @@ def run():
     same = int(sw(big)) == int(checksum(big, route="interpret"))
     rows.append(("checksum_sw_64k", us, f"bitexact={same}"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="input-data RNG seed")
+    for row in run(seed=ap.parse_args().seed):
+        print("%s,%.1f,%s" % row)

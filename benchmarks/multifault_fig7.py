@@ -23,3 +23,13 @@ def run():
     rows.append(("fig7_240k_8fault_still_wins", 0.0,
                  f"{speedup_vs_sw(m12, list(range(8))):.2f}x"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    # accepted for CI uniformity: this bench is closed-form (no RNG)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.parse_args()
+    for row in run():
+        print("%s,%.1f,%s" % row)

@@ -19,3 +19,13 @@ def run():
     rows.append(("fig6_corner_300k_n12_paper9.7", 0.0,
                  f"{speedup_vs_sw(passthrough_model(300_000, 12), [0]):.2f}x"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    # accepted for CI uniformity: this bench is closed-form (no RNG)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.parse_args()
+    for row in run():
+        print("%s,%.1f,%s" % row)

@@ -77,5 +77,7 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
+    # accepted for CI uniformity: the dry-run analysis has no RNG
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print(fmt_table(load(args.mesh)))

@@ -1,9 +1,17 @@
 """Benchmark harness: one module per paper table/figure + system benches.
 
 Prints ``name,us_per_call,derived`` CSV rows (per assignment contract).
+
+The exit status is part of the contract: a sub-benchmark that crashes,
+returns no rows, or returns malformed rows fails the whole run (exit 1)
+— a broken bench can never silently vanish from the aggregate.
+``--seed`` forwards to every module whose ``run()`` accepts one, so CI
+runs are reproducible.
 """
 from __future__ import annotations
 
+import argparse
+import math
 import sys
 import time
 import traceback
@@ -22,24 +30,54 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def _row_error(row) -> str:
+    """Why ``row`` is not a valid (name, us_per_call, derived) row."""
+    if not isinstance(row, (tuple, list)) or len(row) != 3:
+        return "not a 3-tuple"
+    name, us, _derived = row
+    if not isinstance(name, str) or not name:
+        return "empty/non-string name"
+    if isinstance(us, bool) or not isinstance(us, (int, float)) \
+            or not math.isfinite(us):
+        return f"non-finite us_per_call {us!r}"
+    return ""
+
+
+def main(argv=None) -> None:
     import importlib
-    failures = 0
+    import inspect
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="forwarded to every bench run() that takes one")
+    args = ap.parse_args(argv)
+    failures = []
     print("name,us_per_call,derived")
     for modname in MODULES:
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
-            rows = mod.run()
+            kw = ({"seed": args.seed} if "seed" in
+                  inspect.signature(mod.run).parameters else {})
+            rows = list(mod.run(**kw))
+            if not rows:
+                raise RuntimeError(f"{modname}.run() returned no rows")
+            bad = [(row, err) for row in rows
+                   if (err := _row_error(row))]
+            if bad:
+                raise RuntimeError(
+                    f"{modname} emitted malformed row(s): {bad[:3]}")
             for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
             print(f"# {modname} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
-        except Exception:  # noqa: BLE001
-            failures += 1
+        except Exception:  # noqa: BLE001 - every failure must be counted
+            failures.append(modname)
             print(f"# {modname} FAILED", file=sys.stderr)
             traceback.print_exc()
     if failures:
+        print(f"# {len(failures)} benchmark(s) failed: "
+              f"{', '.join(failures)}", file=sys.stderr)
         raise SystemExit(1)
 
 

@@ -103,11 +103,11 @@ def bench_fixed_batch(cfg, params, reqs, fault):
     return _lat_stats(n_useful, dt, lats)
 
 
-def bench(fault):
+def bench(fault, seed: int = 0):
     cfg = get_config(ARCH).reduced()
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    reqs = _workload(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    reqs = _workload(cfg, seed)
     out = {}
     out["continuous_recompile"], done = bench_continuous(
         cfg, params, reqs, RECOMPILE, fault)
@@ -130,11 +130,11 @@ def bench(fault):
     return out
 
 
-def run():
+def run(seed: int = 0):
     """CSV rows for benchmarks/run.py (name, us_per_call, derived)."""
     rows = []
     for label, fault in (("healthy", None), ("fault", FAULT)):
-        res = bench(fault)
+        res = bench(fault, seed=seed)
         for mode in ("continuous_recompile", "continuous_resident",
                      "fixed_batch"):
             m = res[mode]
@@ -153,11 +153,17 @@ def run():
     return rows
 
 
-def main():
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload/init RNG seed")
+    args = ap.parse_args(argv)
     out = {"workload": {"arch": ARCH, "requests": N_REQUESTS,
-                        "slots": SLOTS, "max_len": MAX_LEN},
-           "healthy": bench(None),
-           "fault": bench(FAULT)}
+                        "slots": SLOTS, "max_len": MAX_LEN,
+                        "seed": args.seed},
+           "healthy": bench(None, seed=args.seed),
+           "fault": bench(FAULT, seed=args.seed)}
     print(json.dumps(out, indent=2))
 
 

@@ -17,12 +17,13 @@ from repro.train import TrainConfig, TrainRunner
 from repro.models import build_model
 
 
-def run():
+def run(seed: int = 0):
     rows = []
     cfg = get_config("gemma2-2b").reduced()
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, batch=4,
                                   seq_len=64))
-    r = TrainRunner(cfg, optim.AdamWConfig(), TrainConfig(steps=1), data)
+    r = TrainRunner(cfg, optim.AdamWConfig(),
+                    TrainConfig(steps=1, seed=seed), data)
     params, opt, err = r.init_state()
     batch = data.device_batch(0)
 
@@ -64,10 +65,10 @@ def run():
     # so healthy stages run the interpreted kernel lowering on CPU.
     from repro.viscosity import INTERPRET
     model = build_model(cfg)
-    params_s = model.init(jax.random.PRNGKey(0))
+    params_s = model.init(jax.random.PRNGKey(seed))
     eng = ServeEngine(cfg, params_s, ServeConfig(max_len=96,
                                                  hw_route=INTERPRET))
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1), (4, 32), 0,
                                  cfg.vocab_size).astype(jnp.int32)
     toks, stats = eng.generate(prompts, 24,
                                fault_at_step=(12, "flash_attention"))
@@ -79,3 +80,12 @@ def run():
     rows.append(("decode_step_post_fault", float(np.median(st[13:]) * 1e6),
                  "sw-routed stage"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="init/data RNG seed")
+    for row in run(seed=ap.parse_args().seed):
+        print("%s,%.1f,%s" % row)

@@ -16,7 +16,6 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

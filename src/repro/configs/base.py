@@ -8,8 +8,8 @@ lowered via the dry-run (ShapeDtypeStruct, no allocation).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 # Layer kinds (per-layer static metadata; drives block construction).
 ATTN_GLOBAL = 0

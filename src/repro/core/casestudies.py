@@ -14,7 +14,6 @@ exactly the role the pass-through accelerator plays in the paper.
 from __future__ import annotations
 
 import functools
-from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -217,8 +216,11 @@ def dct_accelerator() -> StagedAccelerator:
     """10-stage 2-D 8x8 DCT-II: 3 row butterfly stages, transpose, 3 column
     stages, transpose, 2 scaling stages (JPEG quant-prep split)."""
     port = (jax.ShapeDtypeStruct((4, 8, 8), jnp.float32),)
-    scale1 = lambda x: x * 0.5      # row-pass normalization
-    scale2 = lambda x: x * 0.5      # column-pass normalization
+    def scale1(x):
+        return x * 0.5              # row-pass normalization
+
+    def scale2(x):
+        return x * 0.5              # column-pass normalization
     fns = [
         _dct8_butterfly1, _dct8_butterfly2, _dct8_rotate, _transpose88,
         _dct8_butterfly1, _dct8_butterfly2, _dct8_rotate, _transpose88,

@@ -17,7 +17,7 @@ aggregate throughput scale linearly with per-fault performance retention.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -90,7 +90,7 @@ def expected_replacements(n_chips: int, ticks: int, p: float,
     if mean > 50 * max_faults:   # deep-normal regime: floor(X/k) ~ X/k
         return n_chips * mean / max_faults
     # exact-ish: sum over Poisson-approximated fault counts
-    from math import exp, lgamma, log
+    from math import exp, log
     lam = -ticks * np.log1p(-p) if p < 1 else float("inf")
     total = 0.0
     kmax = int(lam + 12 * np.sqrt(lam) + 3 * max_faults + 10)
@@ -154,7 +154,10 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
                  degradation: Sequence[float] = (1.0, 0.38, 0.19),
                  max_faults: int = 3, n_spares: int = 0,
                  slots_per_device: int = 1,
-                 steps_per_tick: int = 1) -> TraceReplay:
+                 steps_per_tick: int = 1,
+                 n_hosts: int = 1,
+                 host_loss: Optional[Mapping[int, int]] = None
+                 ) -> TraceReplay:
     """Mirror of the FleetPlan transition semantics over a fault trace.
 
     A fault on a serving device migrates its work to a free hot spare
@@ -164,6 +167,16 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
     schedule and the analytic capacity curve in *slots* (quantized the
     same way ``FleetConfig.capacity_for`` quantizes the serve engine),
     so measured-vs-analytic comparisons are slot-exact.
+
+    ``n_hosts`` adds the multi-host axis: the ``n_workers + n_spares``
+    devices partition into contiguous per-host blocks (must divide
+    evenly) and ``host_loss[tick] = host`` drops a whole block at that
+    tick — mirroring ``FleetPlan.with_host_fault``: serving devices
+    migrate to free spares *outside* the block, the block's idle spares
+    leave the pool, everything else is lost capacity.  The emitted
+    ``("host", h)`` event replays through ``FleetServeEngine`` with a
+    matching ``HostTopology``, so the analytic twin and the measured
+    engine fold the same event log.
     """
     deg = list(degradation)
     if max_faults > len(stage_names) + 1:
@@ -172,6 +185,15 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
             f"stages to quarantine one per fault before device death; "
             f"model has {len(stage_names)}: {list(stage_names)}")
     n_devices = n_workers + n_spares
+    if n_hosts < 1 or n_devices % n_hosts:
+        raise ValueError(f"{n_devices} device(s) do not partition into "
+                         f"{n_hosts} equal host block(s)")
+    per_host = n_devices // n_hosts
+    host_loss = dict(host_loss or {})
+    for h in host_loss.values():
+        if not 0 <= h < n_hosts:
+            raise ValueError(f"host {h} out of range for {n_hosts} "
+                             f"host(s)")
 
     def slot_cap(k: int) -> float:
         return round(slots_per_device * deg[min(k, len(deg) - 1)])
@@ -187,6 +209,20 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
     for t, c in trace:
         by_tick.setdefault(t, []).append(c)
     for t in range(ticks):
+        if t in host_loss:
+            h = host_loss[t]
+            block = set(range(h * per_host, (h + 1) * per_host))
+            events.setdefault(t * steps_per_tick, []).append(("host", h))
+            for d in sorted(block & serving):
+                off_host = [s for s in free_spares if s not in block]
+                serving.discard(d)
+                if off_host:                  # migrate outside the block
+                    free_spares.remove(off_host[0])
+                    serving.add(off_host[0])
+                else:
+                    dead.add(d)
+            free_spares = [s for s in free_spares if s not in block]
+            dead |= block - serving
         for c in by_tick.get(t, ()):
             if c >= n_devices or c not in serving:
                 n_dropped += 1            # fault on quarantined/dead HW
@@ -228,12 +264,19 @@ class FleetHarness:
     measured as decoded tokens per engine step over the fault horizon,
     normalized by a healthy run of the same workload — the same ratio the
     analytic capacity curve predicts.
+
+    ``num_hosts`` is the fleet's host axis: with a host-partitioned
+    engine (``FleetConfig.topology``) and a ``replay_trace(n_hosts=...)``
+    schedule, the same event log — including whole-host losses — replays
+    through both the measured and the analytic side.
     """
 
-    def __init__(self, engine, replay: TraceReplay, *, horizon: int):
+    def __init__(self, engine, replay: TraceReplay, *, horizon: int,
+                 num_hosts: int = 1):
         self.engine = engine
         self.replay = replay
         self.horizon = horizon
+        self.num_hosts = num_hosts
 
     def _mean_tokens(self, stats) -> float:
         per_step = stats["per_step_tokens"][:self.horizon]
@@ -253,6 +296,7 @@ class FleetHarness:
         measured = self._mean_tokens(faulted_stats) / healthy_tps
         analytic = self.replay.mean_ratio
         return {
+            "num_hosts": self.num_hosts,
             "measured_ratio": measured,
             "analytic_ratio": analytic,
             "rel_err": abs(measured - analytic) / analytic,

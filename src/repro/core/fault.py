@@ -20,8 +20,8 @@ Injection: ``FaultInjector`` corrupts a stage's HW path deterministically
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, FrozenSet, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

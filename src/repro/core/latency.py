@@ -19,10 +19,9 @@ All qualitative claims of Figs. 6–8 are reproduced without fitting.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Sequence, Tuple
 
-import numpy as np
 
 
 @dataclass(frozen=True)

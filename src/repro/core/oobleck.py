@@ -18,10 +18,9 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Callable, Hashable, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.fault import FaultSignature
 from repro.core.routing import RoutingPlan

@@ -404,16 +404,46 @@ class FleetPlan:
         return FleetPlan(plans=plans, pool=self.pool,
                          quarantined=self.quarantined, fault_counts=counts)
 
-    def with_device_fault(self, device: int) -> "FleetPlan":
+    def with_device_fault(self, device: int, *,
+                          exclude: Sequence[int] = ()) -> "FleetPlan":
         """Whole-device loss: migrate to a spare when one is free,
-        otherwise the device's capacity is simply gone."""
+        otherwise the device's capacity is simply gone.  ``exclude``
+        holds spares that must not take the work (devices dying in the
+        same transition — a host loss must not migrate onto the dying
+        host's own spares)."""
         if device not in self.serving():
             raise ValueError(f"device {device} is not serving; cannot fail "
                              f"it")
-        pool, _spare = self.pool.assign(device, exclude=self.quarantined)
+        pool, _spare = self.pool.assign(
+            device, exclude=tuple(self.quarantined) + tuple(exclude))
         return FleetPlan(plans=self.plans, pool=pool,
                          quarantined=self.quarantined + (device,),
                          fault_counts=self._bump(device))
+
+    def with_host_fault(self, devices: Sequence[int]) -> "FleetPlan":
+        """A whole host drops out: every serving device in ``devices``
+        quarantines in ONE transition (the multi-host runtime's host-loss
+        event).  Each migrates to a free hot spare *outside* the dying
+        block when one exists; the block's own idle spares leave the pool
+        (they are unreachable hardware, not capacity)."""
+        devices = tuple(sorted(set(devices)))
+        for d in devices:
+            if not 0 <= d < self.n_devices:
+                raise ValueError(f"device index {d} out of range for a "
+                                 f"{self.n_devices}-device fleet")
+        fp = self
+        for d in devices:
+            if d in fp.serving():
+                fp = fp.with_device_fault(d, exclude=devices)
+        lost_idle = tuple(s for s in fp.pool.free() if s in devices)
+        if lost_idle:
+            pool = SparePool(tuple(s for s in fp.pool.spares
+                                   if s not in lost_idle),
+                             fp.pool.assignments)
+            fp = FleetPlan(plans=fp.plans, pool=pool,
+                           quarantined=fp.quarantined + lost_idle,
+                           fault_counts=fp.fault_counts)
+        return fp
 
     def with_recovery(self, device: int, stage_names: Sequence[str], *,
                       target: str = HW) -> "FleetPlan":

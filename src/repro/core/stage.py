@@ -12,13 +12,12 @@ runtime uses them for canary generation and checkpoint hand-off.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro import viscosity
 from repro.viscosity.lang import HW, INTERPRET, SW, OpSpec
 
 

@@ -13,7 +13,7 @@ global batch is generated and device_put with the batch sharding.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

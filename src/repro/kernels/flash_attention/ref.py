@@ -16,7 +16,6 @@ Layout: q (B, Sq, H, D); k, v (B, Skv, Hkv, D); output (B, Sq, H, D).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import functools
 
-import jax.numpy as jnp
-
 from repro import viscosity
 from repro.kernels.swiglu import ref as _ref
 from repro.kernels.swiglu.kernel import swiglu_pallas

@@ -1,0 +1,567 @@
+"""Multi-host fleet runtime: one FleetPlan agreed by every process.
+
+PR 2's fleet layer mapped logical devices onto a single process.  This
+module lifts it across process boundaries, which is where the paper's
+cost argument actually lives (§II Fig. 2 is a *fleet* claim): a fleet of
+hosts coordinating one ``FleetPlan`` so a quarantined device on host A
+migrates its in-flight work to a hot spare owned by host B without
+dropping a request.
+
+The design is deterministic replication.  Fleet health transitions are
+not applied locally and gossiped; they are *events* in one totally
+ordered log, and every host folds the same log over the same initial
+``FleetPlan``:
+
+  * ``FleetEvent`` — one transition (``with_stage_fault`` /
+    ``with_device_fault`` / ``with_recovery`` / host loss), stamped with
+    (step, origin host, per-origin sequence number).  That stamp is a
+    total order: sorting any multiset of events yields one canonical
+    log, independent of network arrival interleaving.
+  * ``EventChannel`` — per-step all-to-all exchange of locally observed
+    events through a ``HostCoordinator``; returns the merged, ordered
+    slice every host applies identically.
+  * ``HostCoordinator`` — the transport.  ``KVCoordinator`` rides the
+    jax.distributed coordination-service key-value store (works on CPU
+    backends where cross-process XLA collectives may not), and
+    ``LocalCoordinator`` is the trivial single-process instance.
+
+``HostTopology`` names the device→host partition and ``HostView``
+extends ``FleetMeshView`` with per-host masks and global→local device
+index translation, so ``launch/sharding.shard_bounds`` can partition a
+global batch while each host executes only its owned slice.
+
+``initialize_runtime`` wraps ``jax.distributed.initialize`` (and turns
+on gloo CPU collectives where available) so the whole thing is drivable
+by ``num_processes >= 2`` subprocess tests with ``JAX_PLATFORMS=cpu``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.routing import FleetPlan
+from repro.launch.mesh import FleetMeshView, _mesh
+from repro.launch.sharding import shard_bounds
+from repro.viscosity.lang import HW, SW
+
+# Event kinds, mirroring the FleetPlan transitions (plus host loss, which
+# expands to one with_host_fault transition over the host's device block).
+STAGE = "stage"
+DEVICE = "device"
+RECOVER = "recover"
+HOST = "host"
+EVENT_KINDS = (STAGE, DEVICE, RECOVER, HOST)
+
+
+# --------------------------------------------------------------- runtime
+@dataclass(frozen=True)
+class DistributedRuntime:
+    """What ``initialize_runtime`` established for this process."""
+
+    num_processes: int
+    process_id: int
+    coordinator_address: Optional[str] = None
+
+
+def initialize_runtime(
+    coordinator_address: Optional[str] = None,
+    num_processes: int = 1,
+    process_id: int = 0,
+    *,
+    cpu_collectives: Optional[str] = "gloo",
+) -> DistributedRuntime:
+    """Wrap ``jax.distributed.initialize`` for the fleet runtime.
+
+    Call before any jax computation (backends must not be initialized
+    yet); per-process local device count comes from the environment
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU).
+    ``num_processes <= 1`` with no coordinator address is the
+    single-process no-op, so the same entry point serves tests and
+    real launches.  ``cpu_collectives`` selects the CPU cross-process
+    collective backend (gloo) where this jax exposes the knob — without
+    it, CPU cross-process *computations* fail but the coordination
+    service (and so ``KVCoordinator``) still works.
+    """
+    import jax
+
+    if num_processes <= 1 and coordinator_address is None:
+        return DistributedRuntime(num_processes=1, process_id=0)
+    if cpu_collectives is not None:
+        try:
+            jax.config.update("jax_cpu_collectives_implementation", cpu_collectives)
+        except Exception:
+            pass  # knob absent in this jax: leave the XLA default
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    return DistributedRuntime(
+        num_processes=jax.process_count(),
+        process_id=jax.process_index(),
+        coordinator_address=coordinator_address,
+    )
+
+
+# -------------------------------------------------------------- topology
+@dataclass(frozen=True)
+class HostTopology:
+    """The device→host partition: ``num_hosts`` hosts own contiguous
+    blocks of ``devices_per_host`` logical fleet devices.
+
+    ``host_id`` is this process's slot; ``None`` means single-process
+    emulation (this process owns every host's devices — the benches and
+    in-process tests exercise the host-axis semantics that way).
+    """
+
+    num_hosts: int
+    devices_per_host: int
+    host_id: Optional[int] = None
+
+    def __post_init__(self):
+        if self.num_hosts < 1 or self.devices_per_host < 1:
+            raise ValueError(
+                f"topology needs >= 1 host and >= 1 device/host, got "
+                f"{self.num_hosts} x {self.devices_per_host}"
+            )
+        if self.host_id is not None and not (0 <= self.host_id < self.num_hosts):
+            raise ValueError(
+                f"host_id {self.host_id} out of range for "
+                f"{self.num_hosts} host(s)"
+            )
+
+    @classmethod
+    def current(cls, devices_per_host: Optional[int] = None) -> "HostTopology":
+        """The topology of the initialized jax.distributed runtime."""
+        import jax
+
+        return cls(
+            num_hosts=jax.process_count(),
+            devices_per_host=(
+                len(jax.local_devices())
+                if devices_per_host is None
+                else devices_per_host
+            ),
+            host_id=jax.process_index(),
+        )
+
+    @property
+    def n_devices(self) -> int:
+        return self.num_hosts * self.devices_per_host
+
+    def host_of(self, device: int) -> int:
+        if not 0 <= device < self.n_devices:
+            raise ValueError(
+                f"device {device} out of range for {self.n_devices} "
+                f"fleet device(s)"
+            )
+        return device // self.devices_per_host
+
+    def local_index(self, device: int) -> int:
+        """Global fleet index → index among its host's devices."""
+        self.host_of(device)
+        return device % self.devices_per_host
+
+    def global_index(self, host: int, local: int) -> int:
+        if not 0 <= local < self.devices_per_host:
+            raise ValueError(
+                f"local index {local} out of range for "
+                f"{self.devices_per_host} device(s)/host"
+            )
+        return host * self.devices_per_host + local
+
+    def devices_of(self, host: Optional[int] = None) -> Tuple[int, ...]:
+        """The device block a host owns (default: this host)."""
+        host = self.host_id if host is None else host
+        if host is None:
+            raise ValueError(
+                "topology has no host_id: pass devices_of(host) "
+                "explicitly in single-process emulation"
+            )
+        lo = host * self.devices_per_host
+        return tuple(range(lo, lo + self.devices_per_host))
+
+    def is_local(self, device: int) -> bool:
+        """Does this process execute ``device``?  Always true in
+        single-process emulation (``host_id is None``)."""
+        if self.host_id is None:
+            return True
+        return self.host_of(device) == self.host_id
+
+
+# ------------------------------------------------------------- host view
+@dataclass(frozen=True)
+class HostView(FleetMeshView):
+    """A ``FleetMeshView`` that knows the device→host partition.
+
+    Adds per-host mask slices and global→local device-index translation
+    on top of the fleet health mask, so multi-host launch code can build
+    local submeshes and pick its slice of ``shard_bounds`` without ever
+    re-deriving the partition.
+    """
+
+    topology: Optional[HostTopology] = None
+
+    def __post_init__(self):
+        if self.topology is None:
+            raise ValueError("HostView requires a HostTopology")
+        if self.topology.n_devices != len(self.mask):
+            raise ValueError(
+                f"topology covers {self.topology.n_devices} device(s), "
+                f"fleet mask has {len(self.mask)}"
+            )
+
+    @classmethod
+    def of(cls, fleet_plan, topology: HostTopology) -> "HostView":
+        """Project a FleetPlan onto the host partition (the multi-host
+        sibling of ``FleetMeshView.from_plan``)."""
+        base = FleetMeshView.from_plan(fleet_plan)
+        return cls(
+            mask=base.mask,
+            quarantined=base.quarantined,
+            idle_spares=base.idle_spares,
+            topology=topology,
+        )
+
+    # ------------------------------------------------------- host slices
+    def host_mask(self, host: int) -> Tuple[bool, ...]:
+        """The health mask restricted to ``host``'s device block."""
+        devs = self.topology.devices_of(host)
+        return tuple(self.mask[d] for d in devs)
+
+    def serving_on(self, host: int) -> Tuple[int, ...]:
+        return tuple(d for d in self.topology.devices_of(host) if self.mask[d])
+
+    def hosts_serving(self) -> Tuple[int, ...]:
+        """Hosts with at least one serving device (a fully lost host
+        drops out of this tuple — the surviving hosts re-fold)."""
+        return tuple(h for h in range(self.topology.num_hosts) if self.serving_on(h))
+
+    def local_serving(self) -> Tuple[int, ...]:
+        """Serving devices this process owns (global indices)."""
+        if self.topology.host_id is None:
+            return self.serving()
+        return self.serving_on(self.topology.host_id)
+
+    # --------------------------------------------- local mesh / sharding
+    def local_serving_devices(self) -> List:
+        """This process's physical devices behind its serving indices
+        (``jax.local_devices``-indexed via the topology translation).
+
+        In single-process emulation (``host_id is None``) every logical
+        index is local, so the mapping is identity — translating
+        through ``local_index`` there would alias the per-host blocks
+        onto the same physical devices."""
+        import jax
+
+        local = jax.local_devices()
+        if self.topology.host_id is None:
+            return self.serving_devices(local)
+        serving = self.local_serving()
+        need = max((self.topology.local_index(d) for d in serving), default=-1)
+        if need >= len(local):
+            raise RuntimeError(
+                f"host view needs local device {need}, process has "
+                f"{len(local)}: short {need + 1 - len(local)} device(s)"
+            )
+        return [local[self.topology.local_index(d)] for d in serving]
+
+    def local_submesh(self, axes: Sequence[str] = ("data",)):
+        """1-D mesh over this host's serving devices only."""
+        devs = self.local_serving_devices()
+        if not devs:
+            raise RuntimeError(
+                f"host {self.topology.host_id} has no serving devices "
+                f"(quarantined={self.quarantined})"
+            )
+        return _mesh((len(devs),), tuple(axes), devices=devs)
+
+    def shard_bounds(self, n_items: int) -> Dict[int, Tuple[int, int]]:
+        """Global-batch partition over the whole fleet mask, filtered to
+        the devices this process owns — every host computes the same
+        global split and takes its own slice."""
+        owned = None if self.topology.host_id is None else self.topology.devices_of()
+        return shard_bounds(n_items, self.mask, owned=owned)
+
+
+# ------------------------------------------------------------- event log
+@dataclass(frozen=True, order=True)
+class FleetEvent:
+    """One fleet transition with its total-order stamp.
+
+    ``(step, origin, seq)`` orders any multiset of events canonically:
+    ``step`` is the engine step the event takes effect at, ``origin``
+    the host that observed it, ``seq`` that host's running counter.
+    ``device`` holds the host index when ``kind == "host"``.
+    """
+
+    step: int
+    origin: int
+    seq: int
+    kind: str
+    device: int
+    stage: str = ""
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(
+                f"unknown fleet event kind {self.kind!r}; expected one "
+                f"of {EVENT_KINDS}"
+            )
+        if self.kind == STAGE and not self.stage:
+            raise ValueError("stage events must name the faulted stage")
+
+    # ------------------------------------------------- wire / engine form
+    def to_wire(self) -> list:
+        return [
+            self.step,
+            self.origin,
+            self.seq,
+            self.kind,
+            self.device,
+            self.stage,
+        ]
+
+    @staticmethod
+    def from_wire(wire: Sequence) -> "FleetEvent":
+        step, origin, seq, kind, device, stage = wire
+        return FleetEvent(
+            step=int(step),
+            origin=int(origin),
+            seq=int(seq),
+            kind=str(kind),
+            device=int(device),
+            stage=str(stage),
+        )
+
+    def engine_tuple(self) -> Tuple:
+        """The event in the FleetServeEngine's tuple dialect."""
+        if self.kind == STAGE:
+            return (STAGE, self.device, self.stage)
+        return (self.kind, self.device)
+
+    @staticmethod
+    def from_engine(step: int, origin: int, seq: int, event: Sequence) -> "FleetEvent":
+        kind = event[0]
+        stage = event[2] if kind == STAGE else ""
+        return FleetEvent(
+            step=step,
+            origin=origin,
+            seq=seq,
+            kind=kind,
+            device=int(event[1]),
+            stage=stage,
+        )
+
+
+def merge_event_logs(
+    *logs: Sequence[FleetEvent],
+) -> Tuple[FleetEvent, ...]:
+    """Canonical merge: the sorted, deduplicated union of per-host logs.
+
+    Deterministic under ANY arrival interleaving — the stamp is a total
+    order, so every host that sees the same event multiset produces the
+    same log (the property test permutes arrivals and asserts this).
+    """
+    merged = set()
+    for log in logs:
+        merged.update(log)
+    return tuple(sorted(merged))
+
+
+def apply_event(
+    plan: FleetPlan,
+    event: FleetEvent,
+    stage_names: Sequence[str],
+    *,
+    target: str = HW,
+    fallback: str = SW,
+    topology: Optional[HostTopology] = None,
+) -> Tuple[FleetPlan, bool]:
+    """Fold one event over a FleetPlan; ``(plan, False)`` when the
+    transition no longer applies (e.g. two hosts both reported a device
+    that the first report already quarantined) — merged logs tolerate
+    benign duplicates instead of desyncing the fleet."""
+    try:
+        if event.kind == STAGE:
+            return plan.with_stage_fault(event.device, event.stage, fallback), True
+        if event.kind == DEVICE:
+            return plan.with_device_fault(event.device), True
+        if event.kind == RECOVER:
+            return plan.with_recovery(event.device, stage_names, target=target), True
+        if topology is None:
+            raise ValueError("host events need a HostTopology for the block")
+        return plan.with_host_fault(topology.devices_of(event.device)), True
+    except (ValueError, KeyError):
+        return plan, False
+
+
+def replay_log(
+    plan: FleetPlan,
+    events: Sequence[FleetEvent],
+    stage_names: Sequence[str],
+    *,
+    target: str = HW,
+    fallback: str = SW,
+    topology: Optional[HostTopology] = None,
+) -> Tuple[FleetPlan, Tuple[FleetEvent, ...]]:
+    """Fold an ordered log over a plan; returns the final plan and the
+    events that were dropped as inapplicable."""
+    dropped: List[FleetEvent] = []
+    for ev in merge_event_logs(events):
+        plan, applied = apply_event(
+            plan,
+            ev,
+            stage_names,
+            target=target,
+            fallback=fallback,
+            topology=topology,
+        )
+        if not applied:
+            dropped.append(ev)
+    return plan, tuple(dropped)
+
+
+def fleet_fingerprint(plan: FleetPlan) -> str:
+    """Stable digest of a FleetPlan's full state — hosts exchange this
+    to assert they agreed on the same plan (the hash() builtin is salted
+    per process, so it cannot cross a process boundary)."""
+    doc = {
+        "plans": [list(p.assignments) + [p.default] for p in plan.plans],
+        "spares": list(plan.pool.spares),
+        "assignments": [list(a) for a in plan.pool.assignments],
+        "quarantined": list(plan.quarantined),
+        "fault_counts": list(plan.fault_counts),
+    }
+    return hashlib.sha256(json.dumps(doc, sort_keys=True).encode()).hexdigest()[:16]
+
+
+# ----------------------------------------------------------- coordinators
+class LocalCoordinator:
+    """The trivial single-host transport (exchange = identity)."""
+
+    num_hosts = 1
+    host_id = 0
+
+    def exchange(self, payload: str) -> List[str]:
+        return [payload]
+
+
+class KVCoordinator:
+    """All-to-all string exchange over the jax.distributed coordination
+    service's key-value store.
+
+    Works wherever ``jax.distributed.initialize`` succeeded — including
+    CPU backends whose XLA cross-process *computations* are unavailable
+    — so fleet coordination never depends on device collectives.  Every
+    call advances a round counter shared by construction (hosts make the
+    same deterministic sequence of exchanges), giving each exchange a
+    fresh key namespace.
+    """
+
+    def __init__(
+        self,
+        num_hosts: Optional[int] = None,
+        host_id: Optional[int] = None,
+        *,
+        client=None,
+        timeout_ms: int = 120_000,
+        namespace: str = "fleet",
+    ):
+        import jax
+
+        self.num_hosts = jax.process_count() if num_hosts is None else num_hosts
+        self.host_id = jax.process_index() if host_id is None else host_id
+        if client is None:
+            from jax._src import distributed as _jax_distributed
+
+            client = _jax_distributed.global_state.client
+            if client is None:
+                raise RuntimeError(
+                    "jax.distributed is not initialized; call "
+                    "initialize_runtime() first"
+                )
+        self._client = client
+        self._timeout_ms = timeout_ms
+        self._namespace = namespace
+        self._round = 0
+
+    def exchange(self, payload: str) -> List[str]:
+        r = self._round
+        self._round += 1
+        key = f"{self._namespace}/x{r}"
+        self._client.key_value_set(f"{key}/{self.host_id}", payload)
+        out = []
+        for h in range(self.num_hosts):
+            if h == self.host_id:
+                out.append(payload)
+            else:
+                out.append(
+                    self._client.blocking_key_value_get(
+                        f"{key}/{h}", self._timeout_ms
+                    )
+                )
+        # Garbage-collect this host's key from two rounds back: rounds
+        # are lockstep (every host makes the same exchange sequence), so
+        # a peer still reading round r-1 has finished r-2 entirely —
+        # deleting r-2 can never race a reader.  Without this the
+        # coordination service accumulates one key per host per step
+        # for the life of the runtime.
+        if r >= 2 and hasattr(self._client, "key_value_delete"):
+            try:
+                self._client.key_value_delete(
+                    f"{self._namespace}/x{r - 2}/{self.host_id}"
+                )
+            except Exception:
+                pass  # cleanup is best-effort; correctness never depends on it
+        return out
+
+
+class EventChannel:
+    """Per-step event agreement over a coordinator.
+
+    Each host publishes the transitions it *locally* observed this step;
+    every host receives the union and applies the canonical merge order.
+    ``log`` accumulates the agreed history — the fleet's event log.
+    """
+
+    def __init__(self, coordinator):
+        self.coordinator = coordinator
+        self.log: List[FleetEvent] = []
+        self._seq = 0
+
+    def _stamp(self, step: int, local_events: Sequence[Sequence]) -> List[FleetEvent]:
+        stamped = []
+        for ev in local_events:
+            host = self.coordinator.host_id
+            stamped.append(FleetEvent.from_engine(step, host, self._seq, ev))
+            self._seq += 1
+        return stamped
+
+    def _merge_payloads(self, payloads: Sequence[str]) -> Tuple[FleetEvent, ...]:
+        logs = [tuple(FleetEvent.from_wire(w) for w in json.loads(p)) for p in payloads]
+        merged = merge_event_logs(*logs)
+        self.log.extend(merged)
+        return merged
+
+    def exchange(
+        self, step: int, local_events: Sequence[Sequence]
+    ) -> Tuple[FleetEvent, ...]:
+        """Agree on this step's events (call once per step, every host)."""
+        stamped = self._stamp(step, local_events)
+        payload = json.dumps([e.to_wire() for e in stamped])
+        return self._merge_payloads(self.coordinator.exchange(payload))
+
+    def exchange_many(
+        self, step_events: Mapping[int, Sequence[Sequence]]
+    ) -> Tuple[FleetEvent, ...]:
+        """One exchange covering several steps (the late-event flush
+        after a workload drains)."""
+        stamped: List[FleetEvent] = []
+        for step in sorted(step_events):
+            stamped.extend(self._stamp(step, step_events[step]))
+        payload = json.dumps([e.to_wire() for e in stamped])
+        return self._merge_payloads(self.coordinator.exchange(payload))

@@ -115,7 +115,6 @@ def build_lowered(arch: str, shape_name: str, mesh,
             opt_sds = jax.eval_shape(optim.init, p_sds)
             o_specs = tree_pspecs(opt_sds, mesh,
                                   lambda p, s, m: P())  # rebuilt below
-            from repro.launch.partition import opt_pspecs, params_pspecs as pp
             o_sh = _ns(mesh, optim.AdamWState(
                 count=P(), mu=params_pspecs(p_sds, mesh, axes),
                 nu=params_pspecs(p_sds, mesh, axes)))
@@ -138,7 +137,8 @@ def build_lowered(arch: str, shape_name: str, mesh,
             # once per microbatch (jax 'unreduced' PartitionSpec).
             dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
             g_specs = params_pspecs(p_sds, mesh, axes)
-            _isP = lambda x: isinstance(x, P)
+            def _isP(x):
+                return isinstance(x, P)
 
             def _extend(s, shape):
                 """Additionally shard a free dim over the data axes

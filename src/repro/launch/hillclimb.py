@@ -12,7 +12,6 @@ table prints the three roofline terms and the dominant-term delta.
 """
 import argparse
 import dataclasses
-import json
 
 from repro.launch import dryrun
 from repro.launch.variants import VARIANTS, variant_mesh

@@ -18,9 +18,7 @@ trip counts:
 """
 from __future__ import annotations
 
-import math
 import re
-from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 
@@ -75,10 +75,15 @@ class FleetMeshView:
     def serving(self) -> Tuple[int, ...]:
         return tuple(i for i, ok in enumerate(self.mask) if ok)
 
-    def serving_devices(self) -> List[jax.Device]:
+    def serving_devices(self, devices=None) -> List[jax.Device]:
         """The physical devices behind the serving logical indices; the
-        view must fit the process (loud error otherwise)."""
-        devices = jax.devices()
+        view must fit the device list (loud error otherwise).
+
+        ``devices`` defaults to ``jax.devices()`` — under an initialized
+        ``jax.distributed`` runtime that is the *global* device list, so
+        logical fleet index i maps to global device i across hosts (the
+        per-host slice lives on ``launch.distributed.HostView``)."""
+        devices = list(jax.devices() if devices is None else devices)
         if self.n_devices > len(devices):
             raise RuntimeError(
                 f"fleet view covers {self.n_devices} devices, process has "
@@ -87,13 +92,13 @@ class FleetMeshView:
         return [devices[i] for i in self.serving()]
 
     def submesh(self, axes: Sequence[str] = ("data",), *,
-                model: int = 1):
+                model: int = 1, devices=None):
         """Health-masked mesh over the serving devices only.
 
         1-D by default (pure data parallel); ``model > 1`` folds the
         serving devices into a (data, model) grid — serving count must be
         divisible, and the error names the shortfall."""
-        devs = self.serving_devices()
+        devs = self.serving_devices(devices)
         n = len(devs)
         if model > 1:
             if n % model:

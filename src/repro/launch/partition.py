@@ -13,7 +13,7 @@ Batch inputs shard over ("pod","data"); decode caches shard batch over
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import numpy as np
 

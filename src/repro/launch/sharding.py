@@ -91,7 +91,8 @@ def named_sharding(mesh: Mesh, *names: Optional[str]) -> NamedSharding:
 
 
 # ----------------------------------------------------- fleet health view
-def shard_bounds(n_items: int, device_mask: Sequence[bool]
+def shard_bounds(n_items: int, device_mask: Sequence[bool], *,
+                 owned: Optional[Sequence[int]] = None
                  ) -> Dict[int, Tuple[int, int]]:
     """Partition ``n_items`` rows across the *serving* devices of a fleet.
 
@@ -100,6 +101,12 @@ def shard_bounds(n_items: int, device_mask: Sequence[bool]
     [0, n_items) contiguously, remainder spread one row at a time over the
     first shards — quarantined devices and idle spares get no slice, so a
     shrinking fleet automatically rebalances the same global batch.
+
+    ``owned`` makes the split host-aware: the bounds are still computed
+    over the *global* mask (every host agrees on the same partition of
+    the same batch), but only the listed device indices are returned —
+    a multi-host process passes its HostTopology block and executes
+    exactly its slice.
     """
     serving = [i for i, ok in enumerate(device_mask) if ok]
     if not serving:
@@ -112,4 +119,6 @@ def shard_bounds(n_items: int, device_mask: Sequence[bool]
         size = base + (1 if k < rem else 0)
         bounds[dev] = (start, start + size)
         start += size
+    if owned is not None:
+        bounds = {d: b for d, b in bounds.items() if d in set(owned)}
     return bounds

@@ -9,9 +9,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
-
-import jax
 
 from repro import optim
 from repro.configs import ARCH_NAMES, get_config

@@ -6,7 +6,7 @@ cell under a variant and compares roofline terms against the baseline.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 
 def _rules_2d(h_ax, f_ax):

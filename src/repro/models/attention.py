@@ -10,8 +10,6 @@ position array makes masking uniform across both cases.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

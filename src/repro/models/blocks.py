@@ -9,7 +9,6 @@ pattern length, not num_layers).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ positions, LayerNorm, plain-GELU MLPs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +16,6 @@ import jax.numpy as jnp
 from repro import viscosity
 from repro.configs.base import ModelConfig
 from repro.core.routing import as_routes
-from repro.kernels.flash_attention import ops as attn_ops
-from repro.kernels.flash_attention import ref as attn_ref
 from repro.models import attention as attn_mod
 from repro.models import layers as L
 
@@ -208,9 +206,10 @@ class EncDecModel:
     def init_cache(self, Bt, max_len):
         cfg = self.cfg
         smax = min(max_len, cfg.max_target_len)
-        kv = lambda: attn_mod.init_kv_cache(Bt, smax, cfg.num_kv_heads,
-                                            cfg.resolved_head_dim,
-                                            self.compute_dtype)
+        def kv():
+            return attn_mod.init_kv_cache(Bt, smax, cfg.num_kv_heads,
+                                          cfg.resolved_head_dim,
+                                          self.compute_dtype)
         return jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs),
             *[kv() for _ in range(cfg.dec_layers)])

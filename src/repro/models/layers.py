@@ -6,8 +6,6 @@ dicts.  Logical-axis sharding constraints are applied through
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -6,7 +6,7 @@ allocation — used by the multi-pod dry-run and by jax.eval_shape.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple, Union
+from typing import Any, Dict, Union
 
 import jax
 import jax.numpy as jnp

@@ -1,9 +1,8 @@
 """Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 
 

@@ -9,16 +9,13 @@ scan body so per-layer static attributes survive jit (see blocks.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro import viscosity
-from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, MAMBA2, RWKV6, ModelConfig
+from repro.configs.base import ATTN_GLOBAL, RWKV6, ModelConfig
 from repro.core.routing import as_routes
-from repro.launch.sharding import constrain
 from repro.models import attention as attn_mod
 from repro.models import blocks as B
 from repro.models import layers as L
@@ -50,8 +47,9 @@ def _stack_layers(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
-ZERO_AUX = lambda: {"aux_loss": jnp.float32(0), "z_loss": jnp.float32(0),
-                    "drop_frac": jnp.float32(0)}
+def ZERO_AUX():
+    return {"aux_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+            "drop_frac": jnp.float32(0)}
 
 
 def remat_wrap(cfg, body):
@@ -117,12 +115,15 @@ class LMModel:
         }
         kind0 = self.metas[0].kind
         if cfg.family == "hybrid":
-            init_l = lambda k: B.init_mamba_block(k, cfg, dt)
+            def init_l(k):
+                return B.init_mamba_block(k, cfg, dt)
             params["shared"] = B.init_attn_block(ks[2], cfg, dt)
         elif kind0 == RWKV6:
-            init_l = lambda k: B.init_rwkv_block(k, cfg, dt)
+            def init_l(k):
+                return B.init_rwkv_block(k, cfg, dt)
         else:
-            init_l = lambda k: B.init_attn_block(k, cfg, dt)
+            def init_l(k):
+                return B.init_attn_block(k, cfg, dt)
         params["layers"] = _stack_init(init_l, ks[1], cfg.num_layers)
         if not cfg.tie_embeddings:
             params["lm_head"] = L.init_lm_head(ks[3], cfg.d_model,
@@ -393,9 +394,11 @@ class LMModel:
             return {"mamba": m, "attn": a}
         G, tail, plen = self.n_groups, self.n_tail, self.plen
         if self.metas[0].kind == RWKV6:
-            mk = lambda j: rwkv_mod.init_rwkv6_state(Bt, cfg, dt)
+            def mk(j):
+                return rwkv_mod.init_rwkv6_state(Bt, cfg, dt)
         else:
-            mk = lambda j: kv(smax_for(self.metas[j].window))
+            def mk(j):
+                return kv(smax_for(self.metas[j].window))
         grp = (tuple(_stack_layers([mk(j) for _ in range(G)])
                      for j in range(plen)) if G > 0 else None)
         return {"grp": grp, "tail": tuple(mk(j) for j in range(tail))}

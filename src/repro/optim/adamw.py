@@ -6,9 +6,8 @@ under pjit (moments inherit the param PartitionSpecs).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +35,8 @@ class AdamWState(NamedTuple):
 
 
 def init(params: PyTree) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(count=jnp.zeros((), jnp.int32),
                       mu=jax.tree_util.tree_map(zeros, params),
                       nu=jax.tree_util.tree_map(zeros, params))

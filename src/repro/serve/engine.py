@@ -32,11 +32,30 @@ migrates to a hot spare when one is free (its in-flight slots drain and
 re-admit — greedy decode makes the re-decoded tokens bit-identical);
 otherwise the device degrades in place exactly like the single-device
 engine.
+
+**Multi-host mode** (``FleetConfig.topology`` + a coordinator): the fleet
+spans processes by deterministic replication.  Every host runs the same
+scheduling loop over the same request list, but only *executes* the slot
+pools of its own device block — remote devices are ``_ShadowWorker``
+bookkeeping twins whose admissions/ticks/evictions replay the identical
+deterministic schedule (slot assignment, budgets, and eviction order never
+depend on token values), so the global queue, capacities, and occupancy
+stay bit-identical across hosts without exchanging any tensor data.
+Fleet-health transitions are agreed through the ordered event log
+(``launch.distributed.EventChannel``): each step every host publishes its
+locally observed events and applies the canonical merge, so one FleetPlan
+exists fleet-wide and a quarantined device on host A re-admits its
+in-flight work on a spare owned by host B — the collective drain/re-admit
+is just the shared queue, no request ever dropped.  ``merge_completions``
+resolves each host's placeholder completions against the owning host's
+real tokens at the end.
 """
 from __future__ import annotations
 
 import collections
+import json
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -48,6 +67,8 @@ from repro.configs.base import ModelConfig
 from repro.core.fault import FaultState
 from repro.core.oobleck import Dispatcher
 from repro.core.routing import FleetPlan, RoutingPlan
+from repro.launch.distributed import EventChannel, HostTopology, \
+    fleet_fingerprint
 from repro.models import build_model
 from repro.train.runner import model_stage_names
 from repro.viscosity import REGISTRY, SW
@@ -76,6 +97,9 @@ class Completion:
     admitted_step: int
     finished_step: int
     latency_s: float                 # wall: queue-eligible -> last token
+    device: int = -1                 # fleet device that decoded it
+    placeholder: bool = False        # True: decoded on a remote host —
+    #                                  merge_completions fills in tokens
 
 
 @dataclass
@@ -98,7 +122,90 @@ class ServeConfig:
     failover: str = RECOMPILE        # RECOMPILE | RESIDENT
 
 
-class ServeEngine:
+def validate_requests(requests: Sequence[Request], max_len: int):
+    """Request sanity shared by every engine front door."""
+    rids = [r.rid for r in requests]
+    if len(set(rids)) != len(rids):
+        raise ValueError("duplicate request ids")
+    for r in requests:
+        if len(r.prompt) < 1:
+            raise ValueError(f"request {r.rid}: prompt must be non-empty")
+        if r.max_new_tokens < 1:
+            raise ValueError(f"request {r.rid}: max_new_tokens must be "
+                             f">= 1, got {r.max_new_tokens}")
+        if len(r.prompt) + r.max_new_tokens > max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt ({len(r.prompt)}) + budget "
+                f"({r.max_new_tokens}) exceeds max_len {max_len}")
+
+
+class _SlotPool:
+    """Slot bookkeeping shared by the real engine and its shadow twins.
+
+    Everything here is value-independent: slot choice (lowest free),
+    eviction (budget exhausted), drain order (youngest first) — so a
+    remote host replaying only this bookkeeping stays in lockstep with
+    the host actually decoding.  Subclasses set ``scfg``, ``placeholder``
+    and ``device_index`` and call ``_init_pool``.
+    """
+
+    placeholder = False              # shadow pools emit placeholder
+    device_index = -1                # completions; fleet sets the index
+
+    def _init_pool(self):
+        self._slots: List[Optional[_Slot]] = [None] * self.scfg.max_slots
+        self.capacity = self.scfg.max_slots   # admission ceiling
+
+    def occupancy(self) -> int:
+        return sum(sl is not None for sl in self._slots)
+
+    def has_free_slot(self) -> bool:
+        return (self.occupancy() < self.capacity
+                and any(sl is None for sl in self._slots))
+
+    def active_slots(self) -> List[int]:
+        return [i for i, sl in enumerate(self._slots) if sl is not None]
+
+    def drain(self) -> List[Request]:
+        """Evict every in-flight sequence and hand back the original
+        requests for re-admission elsewhere (fleet migration).  Partial
+        outputs are discarded — greedy decode makes the re-decoded tokens
+        bit-identical to an uninterrupted run."""
+        drained = [sl.req for sl in self._slots
+                   if sl is not None and sl.req is not None]
+        for i in range(len(self._slots)):
+            self._slots[i] = None
+        return drained
+
+    def drain_excess(self) -> List[Request]:
+        """Evict just enough in-flight sequences to fit a reduced
+        capacity (fleet degradation), youngest first — the least
+        re-decoded work is thrown away."""
+        excess = self.occupancy() - self.capacity
+        if excess <= 0:
+            return []
+        victims = sorted(self.active_slots(),
+                         key=lambda i: len(self._slots[i].out))[:excess]
+        out = [self._slots[i].req for i in victims
+               if self._slots[i].req is not None]
+        for i in victims:
+            self._slots[i] = None
+        return out
+
+    def _finish(self, i: int, step: int, completions: Dict[int,
+                                                           "Completion"]):
+        sl = self._slots[i]
+        completions[sl.rid] = Completion(
+            rid=sl.rid,
+            tokens=np.asarray(() if self.placeholder else sl.out, np.int32),
+            prompt_len=sl.prompt_len, arrival=sl.arrival,
+            admitted_step=sl.admitted_step, finished_step=step,
+            latency_s=time.perf_counter() - sl.eligible_wall,
+            device=self.device_index, placeholder=self.placeholder)
+        self._slots[i] = None
+
+
+class ServeEngine(_SlotPool):
     """Continuous-batching engine; all routing flows through RoutingPlan.
 
     Slot-pool state lives on the instance (``reset_pool`` / ``admit`` /
@@ -156,18 +263,7 @@ class ServeEngine:
             lambda a: jnp.stack([a] * S), self._cache0)
         self._toks = jnp.zeros((S, 1, 1), jnp.int32)
         self._tvec = jnp.zeros((S,), jnp.int32)
-        self._slots: List[Optional[_Slot]] = [None] * S
-        self.capacity = S            # admission ceiling (fleet degradation)
-
-    def occupancy(self) -> int:
-        return sum(sl is not None for sl in self._slots)
-
-    def has_free_slot(self) -> bool:
-        return (self.occupancy() < self.capacity
-                and any(sl is None for sl in self._slots))
-
-    def active_slots(self) -> List[int]:
-        return [i for i, sl in enumerate(self._slots) if sl is not None]
+        self._init_pool()
 
     # ------------------------------------------------------------- plans
     def plan(self) -> RoutingPlan:
@@ -237,21 +333,7 @@ class ServeEngine:
 
     # --------------------------------------------------------- admission
     def _validate(self, requests: Sequence[Request]):
-        rids = [r.rid for r in requests]
-        if len(set(rids)) != len(rids):
-            raise ValueError("duplicate request ids")
-        for r in requests:
-            if len(r.prompt) < 1:
-                raise ValueError(f"request {r.rid}: prompt must be "
-                                 f"non-empty")
-            if r.max_new_tokens < 1:
-                raise ValueError(f"request {r.rid}: max_new_tokens must be "
-                                 f">= 1, got {r.max_new_tokens}")
-            if len(r.prompt) + r.max_new_tokens > self.scfg.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt ({len(r.prompt)}) + budget "
-                    f"({r.max_new_tokens}) exceeds max_len "
-                    f"{self.scfg.max_len}")
+        validate_requests(requests, self.scfg.max_len)
 
     def admit(self, req: Request, step: int, eligible_wall: float,
               completions: Dict[int, Completion]) -> int:
@@ -274,7 +356,7 @@ class ServeEngine:
                                out=[int(first[0])], admitted_step=step,
                                eligible_wall=eligible_wall, req=req)
         if self._slots[i].remaining == 0:         # single-token request
-            self._finish(self._slots, i, step, completions)
+            self._finish(i, step, completions)
         return 1
 
     # ------------------------------------------------------------- ticks
@@ -309,35 +391,9 @@ class ServeEngine:
             sl.out.append(int(nxt_np[i]))
             sl.remaining -= 1
             if sl.remaining == 0:                 # evict finished
-                self._finish(self._slots, i, step, completions)
+                self._finish(i, step, completions)
         return {"active": len(active), "dt": dt, "key": key,
                 "tokens": len(active)}
-
-    def drain(self) -> List[Request]:
-        """Evict every in-flight sequence and hand back the original
-        requests for re-admission elsewhere (fleet migration).  Partial
-        outputs are discarded — greedy decode makes the re-decoded tokens
-        bit-identical to an uninterrupted run."""
-        drained = [sl.req for sl in self._slots
-                   if sl is not None and sl.req is not None]
-        for i in range(len(self._slots)):
-            self._slots[i] = None
-        return drained
-
-    def drain_excess(self) -> List[Request]:
-        """Evict just enough in-flight sequences to fit a reduced
-        capacity (fleet degradation), youngest first — the least
-        re-decoded work is thrown away."""
-        excess = self.occupancy() - self.capacity
-        if excess <= 0:
-            return []
-        victims = sorted(self.active_slots(),
-                         key=lambda i: len(self._slots[i].out))[:excess]
-        out = [self._slots[i].req for i in victims
-               if self._slots[i].req is not None]
-        for i in victims:
-            self._slots[i] = None
-        return out
 
     # -------------------------------------------------------------- run
     def serve(self, requests: Sequence[Request], *,
@@ -388,16 +444,6 @@ class ServeEngine:
         stats["prefill_compiles"] = self._prefill.compiles - prefill_compiles0
         return completions, stats
 
-    @staticmethod
-    def _finish(slots, i, step, completions):
-        sl = slots[i]
-        completions[sl.rid] = Completion(
-            rid=sl.rid, tokens=np.asarray(sl.out, np.int32),
-            prompt_len=sl.prompt_len, arrival=sl.arrival,
-            admitted_step=sl.admitted_step, finished_step=step,
-            latency_s=time.perf_counter() - sl.eligible_wall)
-        slots[i] = None
-
     # ------------------------------------------------- fixed-batch compat
     def generate(self, prompts, n_new: int, *,
                  fault_at_step: Optional[Tuple[int, str]] = None
@@ -430,11 +476,18 @@ class FleetConfig:
     keeps every serving device at full slot capacity.  Capacity is
     quantized to whole slots (``capacity_for``) — the fleet harness uses
     the same quantization on the analytic side, so measured-vs-analytic
-    comparisons are slot-exact."""
+    comparisons are slot-exact.
+
+    ``topology`` partitions the devices across hosts (multi-host mode):
+    with ``topology.host_id`` set, this process executes only its own
+    device block and shadows the rest; ``host_id=None`` keeps everything
+    local while still enabling host-indexed events (single-process
+    emulation, the benches' ``--hosts`` mode)."""
 
     n_devices: int = 2
     n_spares: int = 0
     degradation: Optional[Sequence[float]] = None
+    topology: Optional[HostTopology] = None
 
     def capacity_for(self, n_faults: int, max_slots: int) -> int:
         if self.degradation is None:
@@ -442,6 +495,81 @@ class FleetConfig:
         deg = list(self.degradation)
         f = deg[min(n_faults, len(deg) - 1)]
         return max(0, int(round(max_slots * f)))
+
+
+class _ShadowWorker(_SlotPool):
+    """Bookkeeping twin of a remote host's ``ServeEngine`` slot pool.
+
+    Replays the value-independent half of the pool — admission into the
+    lowest free slot, one budget decrement per tick, eviction at zero —
+    so this host's scheduler stays in lockstep with the host actually
+    decoding.  Completions it emits are placeholders (no tokens);
+    ``merge_completions`` resolves them against the owning host."""
+
+    placeholder = True
+
+    def __init__(self, scfg: ServeConfig):
+        self.scfg = scfg
+        self.fault_state = FaultState()
+        self.reset_pool()
+
+    def reset_pool(self):
+        self._init_pool()
+
+    def admit(self, req: Request, step: int, eligible_wall: float,
+              completions: Dict[int, Completion]) -> int:
+        i = next(idx for idx, sl in enumerate(self._slots) if sl is None)
+        self._slots[i] = _Slot(rid=req.rid, prompt_len=len(req.prompt),
+                               arrival=req.arrival,
+                               remaining=req.max_new_tokens - 1,
+                               out=[0], admitted_step=step,
+                               eligible_wall=eligible_wall, req=req)
+        if self._slots[i].remaining == 0:         # single-token request
+            self._finish(i, step, completions)
+        return 1
+
+    def decode_tick(self, step: int,
+                    completions: Dict[int, Completion]) -> Dict[str, Any]:
+        active = self.active_slots()
+        if not active:
+            return {"active": 0, "dt": 0.0, "key": None, "tokens": 0}
+        for i in active:
+            sl = self._slots[i]
+            sl.out.append(0)         # keeps drain_excess age order exact
+            sl.remaining -= 1
+            if sl.remaining == 0:
+                self._finish(i, step, completions)
+        return {"active": len(active), "dt": 0.0, "key": None,
+                "tokens": len(active)}
+
+
+def merge_completions(coordinator, completions: Dict[int, Completion]
+                      ) -> Dict[int, Completion]:
+    """All-to-all exchange of locally decoded completions: every host
+    publishes its real (non-placeholder) completions and resolves its
+    placeholders against the owning hosts'.  Loud error if any request
+    ends up with no real tokens anywhere — a dropped request can never
+    masquerade as a merge artifact."""
+    local = [[c.rid, np.asarray(c.tokens).tolist(), c.prompt_len,
+              c.arrival, c.admitted_step, c.finished_step, c.latency_s,
+              c.device]
+             for c in completions.values() if not c.placeholder]
+    payloads = coordinator.exchange(json.dumps(local))
+    merged = dict(completions)
+    for host, payload in enumerate(payloads):
+        if host == coordinator.host_id:
+            continue
+        for rid, toks, plen, arr, astep, fstep, lat, dev in \
+                json.loads(payload):
+            merged[rid] = Completion(
+                rid=rid, tokens=np.asarray(toks, np.int32),
+                prompt_len=plen, arrival=arr, admitted_step=astep,
+                finished_step=fstep, latency_s=lat, device=dev)
+    unresolved = sorted(r for r, c in merged.items() if c.placeholder)
+    if unresolved:
+        raise RuntimeError(f"no host decoded request(s) {unresolved}: "
+                           "the fleet schedules desynced across hosts")
+    return merged
 
 
 class FleetServeEngine:
@@ -457,27 +585,52 @@ class FleetServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 fcfg: FleetConfig):
+                 fcfg: FleetConfig, *, coordinator=None):
         if fcfg.n_devices < 1:
             raise ValueError(f"fleet needs >= 1 device, got {fcfg.n_devices}")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.fcfg = fcfg
+        self.topology = fcfg.topology
+        if self.topology is not None and \
+                self.topology.n_devices != fcfg.n_devices:
+            raise ValueError(
+                f"topology covers {self.topology.n_devices} device(s), "
+                f"fleet has {fcfg.n_devices}")
+        self.coordinator = coordinator
+        self.channel: Optional[EventChannel] = None
+        if coordinator is not None and coordinator.num_hosts > 1:
+            if self.topology is None or self.topology.host_id is None:
+                raise ValueError("a multi-host coordinator needs "
+                                 "FleetConfig.topology with host_id set")
+            if coordinator.host_id != self.topology.host_id:
+                raise ValueError(
+                    f"coordinator is host {coordinator.host_id} but the "
+                    f"topology claims host {self.topology.host_id}")
+            self.channel = EventChannel(coordinator)
         self.stage_names = model_stage_names(cfg)
         self.fleet = FleetPlan.healthy(fcfg.n_devices, self.stage_names,
                                        target=scfg.hw_route,
                                        n_spares=fcfg.n_spares)
-        self.workers: List[ServeEngine] = []
+        # Real slot pools for this host's device block, bookkeeping
+        # shadows for everyone else's (single-host: everything is real).
+        self.workers: List[_SlotPool] = []
         shared: Optional[Tuple[Dispatcher, Dispatcher]] = None
-        for _ in range(fcfg.n_devices):
-            w = ServeEngine(cfg, params, scfg, dispatchers=shared,
-                            template=self.workers[0] if self.workers
-                            else None)
-            if shared is None:
-                shared = (w._prefill, w._decode)
+        template: Optional[ServeEngine] = None
+        for d in range(fcfg.n_devices):
+            if self.topology is None or self.topology.is_local(d):
+                w = ServeEngine(cfg, params, scfg, dispatchers=shared,
+                                template=template)
+                if shared is None:
+                    shared = (w._prefill, w._decode)
+                if template is None:
+                    template = w
+            else:
+                w = _ShadowWorker(scfg)
+            w.device_index = d
             self.workers.append(w)
-        self._prefill, self._decode = shared
+        self._prefill, self._decode = shared if shared else (None, None)
         self.event_log: List[dict] = []
         self._sync_capacity()
 
@@ -491,33 +644,50 @@ class FleetServeEngine:
             else:
                 w.capacity = 0
 
-    def _apply(self, event: Tuple, step: int) -> List[Request]:
+    def _apply(self, event: Tuple, step: int, *,
+               strict: bool = True) -> List[Request]:
         """Apply one fault event to the FleetPlan; returns requests drained
-        from newly-quarantined devices (for re-admission)."""
+        from newly-quarantined devices (for re-admission).
+
+        ``strict=False`` (merged multi-host logs) tolerates transitions
+        that no longer apply — two hosts reporting the same device fault
+        must converge, not desync — recording them as dropped."""
         kind, device = event[0], event[1]
-        before = set(self.fleet.quarantined)
-        if kind == "stage":
-            stage = event[2]
-            if stage not in self.stage_names:
-                raise ValueError(f"unknown stage {stage!r}; this model's "
-                                 f"stages: {self.stage_names}")
-            self.fleet = self.fleet.with_stage_fault(device, stage)
-            self.workers[device].fault_state.mark(stage, 0, kind="injected")
-        elif kind == "device":
-            self.fleet = self.fleet.with_device_fault(device)
-        elif kind == "recover":
-            spare = self.fleet.pool.spare_for(device)
-            self.fleet = self.fleet.with_recovery(
-                device, self.stage_names, target=self.scfg.hw_route)
-            self.workers[device].fault_state = FaultState()  # fresh hardware
-            if spare is not None:    # spare returns to the idle pool; its
-                drained = self.workers[spare].drain()   # slots re-admit on
-                self.event_log.append({"step": step, "event": event,
-                                       "drained": len(drained)})
-                self._sync_capacity()   # the recovered device
-                return drained
-        else:
+        if kind not in ("stage", "device", "host", "recover"):
             raise ValueError(f"unknown fleet event kind {kind!r}")
+        if kind == "stage" and event[2] not in self.stage_names:
+            raise ValueError(f"unknown stage {event[2]!r}; this model's "
+                             f"stages: {self.stage_names}")
+        if kind == "host" and self.topology is None:
+            raise ValueError("host events need FleetConfig.topology")
+        before = set(self.fleet.quarantined)
+        try:
+            if kind == "stage":
+                self.fleet = self.fleet.with_stage_fault(device, event[2])
+                self.workers[device].fault_state.mark(event[2], 0,
+                                                      kind="injected")
+            elif kind == "device":
+                self.fleet = self.fleet.with_device_fault(device)
+            elif kind == "host":
+                self.fleet = self.fleet.with_host_fault(
+                    self.topology.devices_of(device))
+            else:                    # recover
+                spare = self.fleet.pool.spare_for(device)
+                self.fleet = self.fleet.with_recovery(
+                    device, self.stage_names, target=self.scfg.hw_route)
+                self.workers[device].fault_state = FaultState()  # fresh hw
+                if spare is not None:  # spare returns to the idle pool; its
+                    drained = self.workers[spare].drain()  # slots re-admit
+                    self.event_log.append({"step": step, "event": event,
+                                           "drained": len(drained)})
+                    self._sync_capacity()  # on the recovered device
+                    return drained
+        except ValueError:
+            if strict:
+                raise
+            self.event_log.append({"step": step, "event": event,
+                                   "dropped": True})
+            return []
         newly_gone = set(self.fleet.quarantined) - before
         drained: List[Request] = []
         for d in sorted(newly_gone):
@@ -545,12 +715,20 @@ class FleetServeEngine:
 
         ``events[k]`` is a list of fault events applied just before engine
         step ``k``: ``("stage", device, stage_name)``,
-        ``("device", device)``, or ``("recover", device)``.  No request is
-        ever dropped: draining re-queues at the front, and completions are
-        bit-identical to the healthy single-device reference (greedy
-        decode + Viscosity equivalence).
+        ``("device", device)``, ``("host", host)``, or
+        ``("recover", device)``.  No request is ever dropped: draining
+        re-queues at the front, and completions are bit-identical to the
+        healthy single-device reference (greedy decode + Viscosity
+        equivalence).
+
+        With a multi-host coordinator, ``events`` holds only this host's
+        *locally observed* events; each step every host publishes its
+        slice through the shared event log and applies the canonical
+        merged order, so all hosts fold the same transitions over the
+        same FleetPlan.  Completions are merged across hosts before
+        returning.
         """
-        self.workers[0]._validate(requests)
+        validate_requests(requests, self.scfg.max_len)
         for w in self.workers:
             w.reset_pool()
         self._sync_capacity()
@@ -559,8 +737,8 @@ class FleetServeEngine:
             sorted(requests, key=lambda r: (r.arrival, r.rid)))
         eligible_wall: Dict[int, float] = {}
         completions: Dict[int, Completion] = {}
-        prefill0 = self._prefill.compiles
-        decode0 = self._decode.compiles
+        prefill0 = self._prefill.compiles if self._prefill else 0
+        decode0 = self._decode.compiles if self._decode else 0
         stats: Dict[str, Any] = {
             "admitted": 0, "steps": 0, "requeued": 0,
             "per_step_tokens": [], "occupancy": [], "capacity": [],
@@ -569,9 +747,16 @@ class FleetServeEngine:
         while queue or any(w.occupancy() for w in self.workers):
             step_tokens = 0
             step_events = events.pop(step, ())
+            if self.channel is not None:
+                # one shared ordered log: publish the locally observed
+                # slice, apply the canonical merge — every host folds the
+                # same transitions in the same order
+                step_events = [e.engine_tuple() for e in
+                               self.channel.exchange(step, step_events)]
             drained: List[Request] = []
             for ev in step_events:
-                drained.extend(self._apply(ev, step))
+                drained.extend(self._apply(ev, step,
+                                           strict=self.channel is None))
             if step_events:
                 # degradation shrank some pools: drain the overflow too,
                 # so capacity changes take effect this step, not after the
@@ -616,16 +801,44 @@ class FleetServeEngine:
         # Events scheduled past the drain point still change fleet health
         # (a recovery at step 40 must not be silently lost because the
         # workload finished at 35) — apply them now, in step order; no
-        # slots are occupied, so nothing drains.
-        for s in sorted(events):
-            for ev in events[s]:
-                self._apply(ev, step=s)
-        stats["late_events"] = sum(len(v) for v in events.values())
+        # slots are occupied, so nothing drains.  Multi-host: one final
+        # exchange so late events reach every host too.
+        if self.channel is not None:
+            late = self.channel.exchange_many(
+                {s: list(v) for s, v in events.items()})
+            for e in late:
+                self._apply(e.engine_tuple(), step=e.step, strict=False)
+            stats["late_events"] = len(late)
+        else:
+            for s in sorted(events):
+                for ev in events[s]:
+                    self._apply(ev, step=s)
+            stats["late_events"] = sum(len(v) for v in events.values())
         stats["steps"] = step
-        stats["decode_compiles"] = self._decode.compiles - decode0
-        stats["prefill_compiles"] = self._prefill.compiles - prefill0
+        stats["decode_compiles"] = (self._decode.compiles - decode0
+                                    if self._decode else 0)
+        stats["prefill_compiles"] = (self._prefill.compiles - prefill0
+                                     if self._prefill else 0)
         stats["quarantined"] = list(self.fleet.quarantined)
         stats["spares_in_service"] = list(self.fleet.pool.in_service())
+        if self.channel is not None:
+            # merged result + cross-host plan agreement witness
+            stats["fleet_fingerprint"] = fleet_fingerprint(self.fleet)
+            completions = merge_completions(self.coordinator, completions)
+        else:
+            # host-partitioned but uncoordinated (shadow-bookkeeping
+            # mode): remote completions are placeholders with no tokens.
+            # Legitimate for schedule tests — but never silent, so a
+            # forgotten coordinator cannot read as empty decodes.
+            unresolved = sorted(r for r, c in completions.items()
+                                if c.placeholder)
+            stats["unresolved_placeholders"] = unresolved
+            if unresolved:
+                warnings.warn(
+                    f"FleetServeEngine returned {len(unresolved)} "
+                    "placeholder completion(s) decoded on remote shadow "
+                    "devices; pass a coordinator to merge real tokens "
+                    "across hosts", stacklevel=2)
         return completions, stats
 
 

@@ -18,14 +18,12 @@ Checkpoints are async + checksummed; restore is elastic (any mesh).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
 from repro.checkpoint.manager import CheckpointManager
@@ -35,7 +33,8 @@ from repro.core.fault import (CanaryChecker, FaultSignature, FaultState,
 from repro.core.oobleck import Dispatcher
 from repro.core.routing import FleetPlan, RoutingPlan
 from repro.core.stage import Stage
-from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.data.pipeline import SyntheticLM
+from repro.launch.distributed import FleetEvent, HostTopology, HostView
 from repro.launch.sharding import shard_bounds
 from repro.models import build_model
 from repro.viscosity import INTERPRET, REGISTRY, SW
@@ -231,6 +230,10 @@ class TrainRunner:
 class FleetTrainConfig:
     n_devices: int = 2
     n_spares: int = 0
+    # Host axis (multi-host fleets): devices partition into contiguous
+    # per-host blocks; a host loss quarantines the whole block in one
+    # FleetPlan transition and the survivors re-fold the mesh.
+    topology: Optional[HostTopology] = None
 
 
 class FleetTrainRunner:
@@ -257,6 +260,11 @@ class FleetTrainRunner:
         self.tcfg = tcfg
         self.data = data
         self.fcfg = fcfg
+        if fcfg.topology is not None and \
+                fcfg.topology.n_devices != fcfg.n_devices:
+            raise ValueError(
+                f"topology covers {fcfg.topology.n_devices} device(s), "
+                f"fleet has {fcfg.n_devices}")
         self.stage_names = model_stage_names(cfg)
         self.fleet = FleetPlan.healthy(fcfg.n_devices, self.stage_names,
                                        target=tcfg.hw_route,
@@ -264,6 +272,9 @@ class FleetTrainRunner:
         self.dispatcher = Dispatcher(self._build_grads)
         self.guard_trips = 0
         self.history: List[Dict[str, float]] = []
+        # Ordered transition log (the multi-host runtime replays this):
+        # every quarantine/migration the runner performs is one event.
+        self.fleet_log: List[FleetEvent] = []
         self._update = jax.jit(
             lambda grads, opt_state, params: optim.update(
                 self.opt_cfg, grads, opt_state, params))
@@ -285,14 +296,42 @@ class FleetTrainRunner:
         params = build_model(self.cfg).init(key)
         return params, optim.init(params)
 
-    def inject_stage_fault(self, device: int, stage: str):
+    def _log_event(self, step: int, kind: str, device: int,
+                   stage: str = ""):
+        topo = self.fcfg.topology
+        origin = 0 if topo is None or topo.host_id is None else topo.host_id
+        self.fleet_log.append(FleetEvent(step=step, origin=origin,
+                                         seq=len(self.fleet_log),
+                                         kind=kind, device=device,
+                                         stage=stage))
+
+    def inject_stage_fault(self, device: int, stage: str, *,
+                           step: int = -1):
         if stage not in self.stage_names:
             raise ValueError(f"unknown stage {stage!r}; this model's stages:"
                              f" {self.stage_names}")
         self.fleet = self.fleet.with_stage_fault(device, stage)
+        self._log_event(step, "stage", device, stage)
 
-    def inject_device_fault(self, device: int):
+    def inject_device_fault(self, device: int, *, step: int = -1):
         self.fleet = self.fleet.with_device_fault(device)
+        self._log_event(step, "device", device)
+
+    def inject_host_fault(self, host: int, *, step: int = -1):
+        """A whole host drops out: quarantine its device block in ONE
+        FleetPlan transition (spares outside the block absorb what they
+        can); the next step re-folds the mesh over the survivors."""
+        if self.fcfg.topology is None:
+            raise ValueError("host faults need FleetTrainConfig.topology")
+        self.fleet = self.fleet.with_host_fault(
+            self.fcfg.topology.devices_of(host))
+        self._log_event(step, "host", host)
+
+    def host_view(self) -> HostView:
+        """The fleet's health projected onto the host partition."""
+        if self.fcfg.topology is None:
+            raise ValueError("host_view needs FleetTrainConfig.topology")
+        return HostView.of(self.fleet, self.fcfg.topology)
 
     # -------------------------------------------------------------- run
     def _shard_step(self, params, batch, poison_device: Optional[int]):
@@ -322,14 +361,22 @@ class FleetTrainRunner:
         return avg, {"loss": sum(losses) / n_rows}, None
 
     def run(self, params, opt_state, *, steps: Optional[int] = None,
-            poison: Optional[Mapping[int, int]] = None):
+            poison: Optional[Mapping[int, int]] = None,
+            host_loss: Optional[Mapping[int, int]] = None):
         """``poison[step] = device`` injects a non-finite shard loss at
         that step (the detect -> quarantine -> migrate loop, test-drivable
-        without real broken silicon)."""
+        without real broken silicon).  ``host_loss[step] = host`` drops a
+        whole host just before that step: its device block quarantines in
+        one transition and the surviving hosts' shards absorb the batch
+        (the mesh re-fold is automatic — shard_bounds follows the mask).
+        """
         steps = steps if steps is not None else self.tcfg.steps
         poison = dict(poison or {})
+        host_loss = dict(host_loss or {})
         step_i = 0
         while step_i < steps:
+            if step_i in host_loss:
+                self.inject_host_fault(host_loss.pop(step_i), step=step_i)
             batch = self.data.device_batch(step_i)
             t0 = time.perf_counter()
             grads, metrics, tripped = self._shard_step(
@@ -340,13 +387,17 @@ class FleetTrainRunner:
                 self.guard_trips += 1
                 poison.pop(step_i, None)     # the bad device is now gone
                 self.fleet = self.fleet.with_device_fault(tripped)
+                self._log_event(step_i, "device", tripped)
                 continue
             params, opt_state, om = self._update(grads, opt_state, params)
-            self.history.append({
+            row = {
                 "step": step_i, "loss": metrics["loss"],
                 "dt": time.perf_counter() - t0,
                 "n_serving": len(self.fleet.serving()),
                 "n_quarantined": len(self.fleet.quarantined),
-                "compiles": self.dispatcher.compiles})
+                "compiles": self.dispatcher.compiles}
+            if self.fcfg.topology is not None:
+                row["hosts_serving"] = len(self.host_view().hosts_serving())
+            self.history.append(row)
             step_i += 1
         return params, opt_state

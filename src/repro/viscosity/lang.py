@@ -28,7 +28,6 @@ not a redesign.  A route is one of
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 

@@ -16,6 +16,9 @@ import functools
 import inspect
 import random
 
+# re-exported for every property-test module (declared in __all__)
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

@@ -1,5 +1,4 @@
 """Flash-attention kernel: interpret-mode vs the pure-jnp oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

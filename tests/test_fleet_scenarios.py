@@ -22,6 +22,8 @@ from repro.configs import get_config
 from repro.core import Dispatcher, FaultSignature
 from repro.core.datacenter import replay_trace
 from repro.core.routing import FleetPlan, RoutingPlan, SparePool
+from repro.launch.distributed import (FleetEvent, HostTopology,
+                                      merge_event_logs, replay_log)
 from repro.models import build_model
 from repro.serve import (RECOMPILE, RESIDENT, FleetConfig, FleetServeEngine,
                          ServeConfig, reference_decode, synthetic_workload)
@@ -212,6 +214,102 @@ def test_fleet_failover_modes_agree_on_real_reroute(setup):
                                       outs[RESIDENT][rid].tokens)
 
 
+# ------------------------------------------------------ host-loss matrix
+@pytest.mark.parametrize("mode", [RECOMPILE, RESIDENT])
+def test_host_loss_survivors_absorb_bit_identical(setup, mode):
+    """A whole host drops out mid-stream (all its devices quarantined in
+    ONE transition): the surviving host absorbs the work — one device
+    migrates to the off-host spare, the other's capacity is lost — with
+    no request dropped and completions bit-identical to the healthy
+    single-device reference, in both failover modes."""
+    cfg, params = setup
+    topo = HostTopology(num_hosts=2, devices_per_host=2)
+    eng = FleetServeEngine(
+        cfg, params, ServeConfig(max_len=48, max_slots=2, hw_route=SW,
+                                 failover=mode),
+        FleetConfig(n_devices=4, n_spares=1, topology=topo))
+    reqs = _workload(cfg)
+    done, stats = eng.serve(reqs, events={3: [("host", 0)]})
+    assert sorted(done) == sorted(r.rid for r in reqs)     # no drops
+    for r in reqs:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=48)
+        np.testing.assert_array_equal(done[r.rid].tokens, ref)
+    assert stats["quarantined"] == [0, 1]        # the whole block, at once
+    assert [e["event"] for e in eng.event_log] == [("host", 0)]
+    assert eng.fleet.pool.spare_for(0) == 3      # off-host spare took over
+    assert eng.fleet.serving() == (2, 3)         # host 1 re-folded
+
+
+def test_with_host_fault_one_transition_algebra():
+    """with_host_fault semantics: serving devices migrate to spares
+    OUTSIDE the dying block, the block's idle spares leave the pool, and
+    the whole loss is one pure transition."""
+    fp = FleetPlan.healthy(6, STAGES, n_spares=2)          # spares 4, 5
+    hf = fp.with_host_fault((0, 1))
+    assert hf.quarantined == (0, 1)
+    assert hf.pool.spare_for(0) == 4 and hf.pool.spare_for(1) == 5
+    assert hf.serving() == (2, 3, 4, 5)
+
+    # a host that contains the fleet's only spare: the spare must not
+    # absorb its own host's work, and it leaves the pool with the host
+    fp2 = FleetPlan.healthy(4, STAGES, n_spares=1)         # spare 3
+    hf2 = fp2.with_host_fault((2, 3))
+    assert hf2.quarantined == (2, 3)
+    assert hf2.pool.spares == ()
+    assert hf2.serving() == (0, 1)
+    # idempotent-ish: nothing left to lose on a dead block
+    assert hf2.with_host_fault((2, 3)) == hf2
+
+
+def test_replay_trace_host_loss_matches_engine_semantics():
+    """The analytic twin's host-loss accounting mirrors with_host_fault:
+    off-block spare absorbs one device, the rest is lost capacity."""
+    rep = replay_trace((), n_workers=3, ticks=6, stage_names=STAGES,
+                       n_spares=1, slots_per_device=4, n_hosts=2,
+                       host_loss={2: 0})
+    assert ("host", 0) in rep.events[2]
+    # ticks 0,1: 3 workers x 4 slots; ticks 2+: device 0 -> spare 3,
+    # device 1 lost -> 2 serving devices
+    assert list(rep.capacity) == [12, 12, 8, 8, 8, 8]
+    with pytest.raises(ValueError):
+        replay_trace((), n_workers=2, ticks=2, stage_names=STAGES,
+                     n_hosts=2, host_loss={0: 5})
+    with pytest.raises(ValueError):                 # 3 devices, 2 hosts
+        replay_trace((), n_workers=3, ticks=2, stage_names=STAGES,
+                     n_hosts=2)
+
+
+# ------------------------------------------- event-log determinism (prop)
+@settings(max_examples=25, deadline=None)
+@given(order=st.lists(st.integers(0, 10_000), min_size=6, max_size=6),
+       cut=st.integers(0, 6))
+def test_property_event_log_interleaving_invariant(order, cut):
+    """Any interleaving of per-host event arrival — and any split of the
+    events across host logs — yields the same merged log and the same
+    final FleetPlan (the multi-host agreement property)."""
+    events = [
+        FleetEvent(2, 0, 0, "stage", 0, STAGES[0]),
+        FleetEvent(2, 1, 0, "device", 1),
+        FleetEvent(4, 0, 1, "stage", 2, STAGES[1]),
+        FleetEvent(4, 1, 1, "host", 1),
+        FleetEvent(5, 0, 2, "recover", 0),
+        FleetEvent(6, 1, 2, "device", 3),
+    ]
+    topo = HostTopology(num_hosts=3, devices_per_host=2)
+    base = FleetPlan.healthy(6, STAGES, target=INTERPRET, n_spares=2)
+    ref_plan, ref_dropped = replay_log(base, events, STAGES,
+                                       target=INTERPRET, topology=topo)
+    perm = sorted(range(len(events)), key=lambda i: (order[i], i))
+    shuffled = [events[i] for i in perm]
+    assert merge_event_logs(shuffled[:cut], shuffled[cut:]) == \
+        merge_event_logs(events)
+    plan, dropped = replay_log(base, shuffled, STAGES, target=INTERPRET,
+                               topology=topo)
+    assert plan == ref_plan and hash(plan) == hash(ref_plan)
+    assert dropped == ref_dropped
+
+
 # ---------------------------------------------------------- FleetHarness
 def test_fleet_harness_tracks_analytic_curve():
     """Acceptance: replaying a simulate_fleet Monte-Carlo fault trace
@@ -316,6 +414,34 @@ def test_fleet_train_stage_fault_reroutes_one_shard():
     assert r2.fleet.plan_for(0) != r2.fleet.plan_for(1)
     assert r2.fleet.plans[0].target_for("flash_attention") == SW
     assert r2.fleet.plans[1].target_for("flash_attention") == INTERPRET
+
+
+def test_fleet_train_host_dropout_refolds_mesh():
+    """The FleetTrainRunner host-dropout path: a lost host quarantines
+    its whole device block in ONE transition (logged as one host event),
+    the faulted block's work migrates to the off-host spare, and the
+    surviving hosts re-fold the mesh — training continues finite."""
+    cfg = get_config(ARCH).reduced()
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, batch=8,
+                                  seq_len=16))
+    topo = HostTopology(num_hosts=2, devices_per_host=2)
+    r = FleetTrainRunner(
+        cfg, optim.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20),
+        TrainConfig(steps=4, hw_route=SW), data,
+        FleetTrainConfig(n_devices=4, n_spares=1, topology=topo))
+    params, opt = r.init_state()
+    params, opt = r.run(params, opt, steps=3, host_loss={1: 0})
+    assert r.history[0]["n_serving"] == 3         # workers 0,1,2 healthy
+    assert r.history[0]["hosts_serving"] == 2
+    assert all(h["n_serving"] == 2 for h in r.history[1:])
+    assert all(h["hosts_serving"] == 1 for h in r.history[1:])
+    assert set(r.fleet.quarantined) == {0, 1}     # the block, at once
+    assert r.fleet.pool.spare_for(0) == 3         # off-host spare absorbs
+    assert all(np.isfinite(h["loss"]) for h in r.history)
+    assert [(e.kind, e.device) for e in r.fleet_log] == [("host", 0)]
+    # the re-fold: the same global batch redistributes over survivors
+    from repro.launch.sharding import shard_bounds
+    assert set(shard_bounds(8, r.fleet.device_mask())) == {2, 3}
 
 
 # --------------------------------------- dispatcher churn (fleet-keyed)

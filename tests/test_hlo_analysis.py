@@ -1,7 +1,6 @@
 """HLO analyzer: trip-count-aware flops/bytes/collectives."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import HLOModule, analyze

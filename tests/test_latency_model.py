@@ -1,10 +1,9 @@
 """Latency model (paper §V, Figs. 5-8): reported numbers + qualitative laws."""
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.latency import (AccelModel, aes_model, dct_model, exec_time,
-                                fft_model, passthrough_model, speedup_vs_sw,
+from repro.core.latency import (aes_model, dct_model, exec_time, fft_model,
+                                passthrough_model, speedup_vs_sw,
                                 throughput_factor)
 
 

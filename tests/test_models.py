@@ -1,6 +1,5 @@
 """Per-arch smoke tests (assignment deliverable f): reduced same-family
 configs, one forward/train step on CPU, output shapes + no NaNs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

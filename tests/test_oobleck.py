@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (CanaryChecker, Dispatcher, FaultSignature,
-                        FaultState, Stage, StagedAccelerator, inject)
+from repro.core import (CanaryChecker, Dispatcher, FaultSignature, FaultState,
+                        StagedAccelerator, inject)
 from repro.core.casestudies import (aes_accelerator, dct_accelerator,
                                     dct_reference, fft_accelerator,
                                     fft_reference)

@@ -85,6 +85,22 @@ def test_shard_bounds_covers_batch_and_skips_masked():
         shard_bounds(4, [False, False])
 
 
+def test_shard_bounds_owned_slice_is_host_aware():
+    """``owned`` filters to one host's block without changing the global
+    split: every host computes the same partition, takes its own slice,
+    and the union over hosts is exactly the unfiltered bounds."""
+    from repro.launch.sharding import shard_bounds
+
+    mask = [True, False, True, True, True, False]      # 4 serving of 6
+    full = shard_bounds(10, mask)
+    host0 = shard_bounds(10, mask, owned=(0, 1, 2))    # host blocks of 3
+    host1 = shard_bounds(10, mask, owned=(3, 4, 5))
+    assert set(host0) == {0, 2} and set(host1) == {3, 4}
+    assert {**host0, **host1} == full
+    # a host whose devices are all masked out simply gets no slice
+    assert shard_bounds(10, mask, owned=(1, 5)) == {}
+
+
 def test_fleet_mesh_view_masks_and_errors():
     """FleetMeshView carries quarantined/spare devices explicitly and the
     submesh error names how many serving devices are missing."""

@@ -7,20 +7,17 @@ The paper's top-level claims, exercised on the real framework:
      (one recompile per new signature);
   3. a full train -> fault -> recover -> checkpoint -> restart cycle works.
 """
-import os
 import tempfile
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import optim
 from repro.configs import get_config
 from repro.core import CanaryChecker, FaultState, inject
 from repro.core.casestudies import fft_accelerator
 from repro.data import DataConfig, SyntheticLM
-from repro.train import TrainConfig, TrainRunner, canary_stages
+from repro.train import TrainConfig, TrainRunner
 
 
 def test_vfa_not_sfa():

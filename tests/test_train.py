@@ -1,5 +1,4 @@
 """Training runner: convergence, fault reroute, NaN-guard restart."""
-import os
 import tempfile
 
 import jax
