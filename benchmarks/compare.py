@@ -1,0 +1,108 @@
+"""Bench-trajectory regression checker: old snapshot vs new snapshot.
+
+Usage:
+    python -m benchmarks.compare OLD.json NEW.json [--fail-ratio 2.0]
+
+Both files are ``benchmarks.run --emit-json`` snapshots.  Each bench's
+``us_per_call`` is first normalized by its snapshot's ``calibration_us``
+(a fixed jitted matmul timed on the same runner), so a slower CI machine
+does not read as a kernel regression.  Verdicts per bench:
+
+  * ratio > ``--fail-ratio`` (default 2.0)  -> FAIL (exit 1)
+  * ratio > ``--warn-ratio`` (default 1.25) -> WARN (printed, exit 0)
+  * bench present in OLD but missing in NEW -> FAIL (a bench that
+    silently disappears is a coverage regression, not a speedup)
+  * bench only in NEW                       -> NEW (informational)
+
+Rows whose old timing is below ``--min-us`` (default 1.0us) are skipped:
+at that scale the measurement is dominated by dispatch noise and any
+ratio is meaningless.  Self-comparison of a snapshot against itself is
+the CI smoke contract: always exit 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        snap = json.load(f)
+    for key in ("benches", "calibration_us"):
+        if key not in snap:
+            raise SystemExit(f"{path}: not a bench snapshot (no {key!r})")
+    if not snap["calibration_us"] or snap["calibration_us"] <= 0:
+        raise SystemExit(f"{path}: bad calibration_us "
+                         f"{snap.get('calibration_us')!r}")
+    return snap
+
+
+def compare(old: dict, new: dict, *, fail_ratio: float = 2.0,
+            warn_ratio: float = 1.25, min_us: float = 1.0):
+    """Yield (verdict, name, ratio, old_us, new_us) per bench.
+
+    ``ratio`` is calibration-normalized new/old time (>1 = slower); None
+    for SKIP/MISSING/NEW rows where no ratio is defined.
+    """
+    ocal, ncal = old["calibration_us"], new["calibration_us"]
+    for name, orow in sorted(old["benches"].items()):
+        ous = float(orow["us_per_call"])
+        nrow = new["benches"].get(name)
+        if nrow is None:
+            yield "MISSING", name, None, ous, None
+            continue
+        nus = float(nrow["us_per_call"])
+        if ous < min_us:
+            yield "SKIP", name, None, ous, nus
+            continue
+        ratio = (nus / ncal) / (ous / ocal)
+        verdict = ("FAIL" if ratio > fail_ratio
+                   else "WARN" if ratio > warn_ratio else "ok")
+        yield verdict, name, ratio, ous, nus
+    for name, nrow in sorted(new["benches"].items()):
+        if name not in old["benches"]:
+            yield "NEW", name, None, None, float(nrow["us_per_call"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="committed baseline snapshot (BENCH_<n>.json)")
+    ap.add_argument("new", help="freshly emitted snapshot")
+    ap.add_argument("--fail-ratio", type=float, default=2.0)
+    ap.add_argument("--warn-ratio", type=float, default=1.25)
+    ap.add_argument("--min-us", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    old, new = load(args.old), load(args.new)
+    scale = new["calibration_us"] / old["calibration_us"]
+    print(f"# calibration: old {old['calibration_us']:.1f}us  "
+          f"new {new['calibration_us']:.1f}us  (runner {scale:.2f}x)")
+    counts: dict = {}
+    for verdict, name, ratio, ous, nus in compare(
+            old, new, fail_ratio=args.fail_ratio,
+            warn_ratio=args.warn_ratio, min_us=args.min_us):
+        counts[verdict] = counts.get(verdict, 0) + 1
+        if verdict in ("ok", "SKIP"):
+            # SKIP rows are the analytic (0-us derived-metric) benches;
+            # listing all of them would drown the actionable lines
+            continue
+        rtxt = f"{ratio:.2f}x" if ratio is not None else "-"
+        otxt = f"{ous:.1f}" if ous is not None else "-"
+        ntxt = f"{nus:.1f}" if nus is not None else "-"
+        print(f"{verdict:8s} {name:40s} {rtxt:>8s}  "
+              f"old {otxt}us  new {ntxt}us")
+    total = sum(counts.values())
+    print(f"# {total} benches: " + ", ".join(
+        f"{v} {verdict.lower()}" for verdict, v in sorted(counts.items())))
+    bad = counts.get("FAIL", 0) + counts.get("MISSING", 0)
+    if bad:
+        print(f"# REGRESSION: {bad} bench(es) failed the "
+              f">{args.fail_ratio:g}x gate (or went missing)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

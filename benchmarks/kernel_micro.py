@@ -93,6 +93,42 @@ def run(seed: int = 0):
     us = _wall(sw, big)
     same = int(sw(big)) == int(checksum(big, route="interpret"))
     rows.append(("checksum_sw_64k", us, f"bitexact={same}"))
+
+    # tuned vs default: inline-tune the SW chunk knobs (real XLA
+    # tunables — chunking changes the lowered program) with a tiny
+    # budget and report both walls side by side.  persist=False keeps
+    # the bench hermetic: nothing is written to the on-disk cache.
+    from repro.kernels import tuning
+    from repro.kernels.tuning import tuner as ktuner
+
+    def tuned_pair(name, kernel, shape, make_fn, arrays, default_cfg):
+        measure = ktuner.jax_measure(make_fn, arrays, reps=3)
+        default_us = measure(default_cfg)
+        cfg, tuned_us = tuning.tune_kernel(
+            kernel, "sw", shape, jnp.float32, measure=measure,
+            budget=8, persist=False)
+        knob = ";".join(f"{kk_}={vv_}" for kk_, vv_ in sorted(cfg.items()))
+        dflt = ";".join(f"{kk_}={vv_}" for kk_, vv_ in
+                        sorted(default_cfg.items()))
+        return [(f"{name}_default", default_us, f"cfg={dflt}"),
+                (f"{name}_tuned", tuned_us,
+                 f"cfg={knob};speedup={default_us/max(tuned_us,1e-9):.2f}x")]
+
+    rows += tuned_pair(
+        "attn_sw_tune", "flash_attention", (B, S, S, H, Hkv, D),
+        lambda cfg: jax.jit(lambda *a: attn_ops.attention(
+            *a, causal=True, route="sw", kv_chunk=cfg["kv_chunk"])),
+        (q, k, v), {"kv_chunk": 512})
+    rows += tuned_pair(
+        "ssd_sw_tune", "mamba2_ssd", (2, 512, 4, 32, 16),
+        lambda cfg: jax.jit(lambda *a: ssd_ops.ssd(
+            *a, route="sw", chunk=cfg["chunk"])),
+        (x, dt, A, Bm, C), {"chunk": 128})
+    rows += tuned_pair(
+        "wkv6_sw_tune", "rwkv6_wkv", (2, 256, 4, 16, 16),
+        lambda cfg: jax.jit(lambda *a: wkv_ops.wkv6(
+            *a, route="sw", chunk=cfg["chunk"])),
+        (r, kk, vv, lw, u), {"chunk": 16})
     return rows
 
 

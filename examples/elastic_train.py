@@ -7,8 +7,9 @@ This script forces 8 host devices, so it must run as its own process:
 """
 import os
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
+from repro.launch.xla_presets import force_host_device_count
+
+force_host_device_count(8)
 # Pin the CPU backend: off-TPU, probing the TPU plugin first burns minutes
 # on metadata retries before falling back to CPU anyway.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -25,6 +25,7 @@ import jax
 from repro.core.fault import FaultSignature
 from repro.core.routing import RoutingPlan
 from repro.core.stage import Stage
+from repro.kernels import tuning
 from repro.viscosity.lang import HW, SW
 
 
@@ -121,7 +122,11 @@ class Dispatcher:
             e = self._cache[cache_key]
             e.n_calls += 1
             return e.fn
-        fn = self.build(key)
+        # Build AND trace under the plan scope: any kernel traced while
+        # this executable compiles looks up tuned block sizes under this
+        # plan's key first (degraded plans may carry different tiles).
+        with tuning.plan_scope(cache_key):
+            fn = tuning.scoped(cache_key, self.build(key))
         self.compiles += 1
         self._cache[cache_key] = _Entry(fn=fn, n_calls=1)
         if len(self._cache) > self.capacity:

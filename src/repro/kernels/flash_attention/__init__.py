@@ -1,7 +1,8 @@
 from repro.kernels.flash_attention.ops import ATTENTION, attention
 from repro.kernels.flash_attention.ref import (attention_chunked,
                                                attention_flops,
-                                               attention_naive)
+                                               attention_naive,
+                                               attention_ref_blocked)
 
 __all__ = ["ATTENTION", "attention", "attention_chunked", "attention_naive",
-           "attention_flops"]
+           "attention_ref_blocked", "attention_flops"]

@@ -13,6 +13,7 @@ import functools
 import jax.numpy as jnp
 
 from repro import viscosity
+from repro.kernels import tuning
 from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 
@@ -27,7 +28,7 @@ def _pad_to(x, m, axis):
 
 
 def _kernel_path(q, k, v, *, causal=True, window=0, softcap=0.0, scale=0.0,
-                 q_offset=None, kv_len=None, kv_chunk=0, bq=128, bk=128,
+                 q_offset=None, kv_len=None, kv_chunk=0, bq=None, bk=None,
                  interpret=False):
     if q_offset is not None or kv_len is not None:
         # decode-style calls carry dynamic positions; the kernel targets
@@ -37,6 +38,16 @@ def _kernel_path(q, k, v, *, causal=True, window=0, softcap=0.0, scale=0.0,
                                       q_offset=q_offset, kv_len=kv_len)
     B, Sq, H, D = q.shape
     Skv = k.shape[1]
+    # Tuned score-tile (bq, bk) for this (shape, dtype, active routing
+    # plan) when cached; explicit knobs win; no entry -> the historical
+    # 128x128 MXU tile.  tuning.lookup is fail-open by construction.
+    if bq is None and bk is None:
+        cfg = tuning.lookup("flash_attention", "hw",
+                            (B, Sq, Skv, H, k.shape[2], D), q.dtype) or {}
+    else:
+        cfg = {}
+    bq = bq or cfg.get("bq") or 128
+    bk = bk or cfg.get("bk") or 128
     bq = min(bq, max(8, Sq))
     bk = min(bk, max(8, Skv))
     qt = q.transpose(0, 2, 1, 3)
@@ -51,9 +62,14 @@ def _kernel_path(q, k, v, *, causal=True, window=0, softcap=0.0, scale=0.0,
     return out[:, :, :Sq, :].transpose(0, 2, 1, 3)
 
 
-def _sw_path(q, k, v, *, kv_chunk=512, bq=128, bk=128, interpret=False,
+def _sw_path(q, k, v, *, kv_chunk=None, bq=128, bk=128, interpret=False,
              **kw):
-    kv_chunk = kv_chunk or 512
+    if not kv_chunk:
+        B, Sq, H, D = q.shape
+        cfg = tuning.lookup("flash_attention", "sw",
+                            (B, Sq, k.shape[1], H, k.shape[2], D),
+                            q.dtype) or {}
+        kv_chunk = cfg.get("kv_chunk") or 512
     return _ref.attention_chunked(q, k, v, kv_chunk=kv_chunk, **kw)
 
 

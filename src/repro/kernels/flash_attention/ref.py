@@ -155,6 +155,75 @@ def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
+def attention_ref_blocked(q, k, v, *, causal: bool = True, window: int = 0,
+                          softcap: float = 0.0, scale: float = 0.0,
+                          kv_len: int = 0, bq: int = 128, bk: int = 128):
+    """Pure-jnp replica of the Pallas flash kernel's *blocked* algorithm.
+
+    Layout (B, H, S, D) like ``kernel.flash_attention_bhsd``; same block
+    skipping, same masks, same f32 online-softmax update order, same
+    GQA head mapping — interpret-mode kernel output must match this
+    oracle **bit-for-bit** for every admissible (bq, bk).  The parity
+    tests sweep the tuner's whole config space against it.
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    sc = scale or (1.0 / D ** 0.5)
+    kv_len = kv_len or Skv
+    out = jnp.zeros((B, H, Sq, D), q.dtype)
+    for b in range(B):
+        for h in range(H):
+            kh = h * Hkv // H  # the kernel's GQA BlockSpec index map
+            for qi in range(nq):
+                q_start = qi * bq
+                m = jnp.full((bq, 1), NEG_INF, jnp.float32)
+                l = jnp.zeros((bq, 1), jnp.float32)
+                acc = jnp.zeros((bq, D), jnp.float32)
+                for ki in range(nk):
+                    k_start = ki * bk
+                    run = k_start < kv_len
+                    if causal:
+                        run &= k_start <= q_start + bq - 1
+                    if window and window > 0:
+                        run &= (k_start + bk - 1) > (q_start - window)
+                    if not run:
+                        continue
+                    qb = q[b, h, q_start:q_start + bq].astype(
+                        jnp.float32) * sc
+                    kb = k[b, kh, k_start:k_start + bk].astype(jnp.float32)
+                    vb = v[b, kh, k_start:k_start + bk].astype(jnp.float32)
+                    s = jax.lax.dot_general(
+                        qb, kb, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    if softcap and softcap > 0.0:
+                        s = jnp.tanh(s / softcap) * softcap
+                    qp = q_start + jax.lax.broadcasted_iota(
+                        jnp.int32, (bq, bk), 0)
+                    kp = k_start + jax.lax.broadcasted_iota(
+                        jnp.int32, (bq, bk), 1)
+                    mask = kp < kv_len
+                    if causal:
+                        mask &= kp <= qp
+                    if window and window > 0:
+                        mask &= kp > qp - window
+                    s = jnp.where(mask, s, NEG_INF)
+                    m_cur = jnp.max(s, axis=1, keepdims=True)
+                    m_new = jnp.maximum(m, m_cur)
+                    p = jnp.exp(s - m_new)
+                    corr = jnp.exp(m - m_new)
+                    l = l * corr + jnp.sum(p, axis=1, keepdims=True)
+                    m = m_new
+                    pv = jax.lax.dot_general(
+                        p, vb, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    acc = acc * corr + pv
+                o = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+                out = out.at[b, h, q_start:q_start + bq].set(o)
+    return out
+
+
 def attention_flops(B, Sq, Skv, H, D, causal=True) -> int:
     """Analytic useful-FLOP model (used by the roofline report)."""
     frac = 0.5 if (causal and Sq == Skv) else 1.0

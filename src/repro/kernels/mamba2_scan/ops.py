@@ -6,16 +6,27 @@ import functools
 import jax.numpy as jnp
 
 from repro import viscosity
+from repro.kernels import tuning
 from repro.kernels.mamba2_scan import ref as _ref
 from repro.kernels.mamba2_scan.kernel import ssd_chunked_pallas
 
 
-def _sw(x, dt, A, B_, C, *, chunk: int = 128):
+def _tuned_chunk(kind, x, B_, default):
+    cfg = tuning.lookup(
+        "mamba2_ssd", kind,
+        (x.shape[0], x.shape[1], x.shape[2], x.shape[3], B_.shape[-1]),
+        x.dtype) or {}
+    return cfg.get("chunk") or default
+
+
+def _sw(x, dt, A, B_, C, *, chunk=None):
+    chunk = chunk or _tuned_chunk("sw", x, B_, 128)
     y, _ = _ref.ssd_chunked(x, dt, A, B_, C, chunk=chunk)
     return y
 
 
-def _hw(x, dt, A, B_, C, *, chunk: int = 128, interpret: bool = False):
+def _hw(x, dt, A, B_, C, *, chunk=None, interpret: bool = False):
+    chunk = chunk or _tuned_chunk("hw", x, B_, 128)
     S = x.shape[1]
     L = min(chunk, S)
     if S % L:

@@ -6,16 +6,27 @@ import functools
 import jax.numpy as jnp
 
 from repro import viscosity
+from repro.kernels import tuning
 from repro.kernels.rwkv6_scan import ref as _ref
 from repro.kernels.rwkv6_scan.kernel import wkv6_chunked_pallas
 
 
-def _sw(r, k, v, lw, u, *, chunk: int = 16):
+def _tuned_chunk(kind, r, v, default):
+    cfg = tuning.lookup(
+        "rwkv6_wkv", kind,
+        (r.shape[0], r.shape[1], r.shape[2], r.shape[3], v.shape[-1]),
+        r.dtype) or {}
+    return cfg.get("chunk") or default
+
+
+def _sw(r, k, v, lw, u, *, chunk=None):
+    chunk = chunk or _tuned_chunk("sw", r, v, 16)
     o, _ = _ref.wkv6_chunked(r, k, v, lw, u, chunk=chunk)
     return o
 
 
-def _hw(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = False):
+def _hw(r, k, v, lw, u, *, chunk=None, interpret: bool = False):
+    chunk = chunk or _tuned_chunk("hw", r, v, 16)
     S = r.shape[1]
     L = min(chunk, S)
     if S % L:

@@ -1,4 +1,6 @@
 from repro.kernels.swiglu.ops import SWIGLU, swiglu
-from repro.kernels.swiglu.ref import swiglu_flops, swiglu_ref
+from repro.kernels.swiglu.ref import (swiglu_flops, swiglu_ref,
+                                      swiglu_ref_blocked)
 
-__all__ = ["SWIGLU", "swiglu", "swiglu_ref", "swiglu_flops"]
+__all__ = ["SWIGLU", "swiglu", "swiglu_ref", "swiglu_ref_blocked",
+           "swiglu_flops"]

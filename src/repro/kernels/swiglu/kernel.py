@@ -1,12 +1,20 @@
 """Pallas TPU kernel for the fused gated MLP.
 
 Fuses both matmuls of the gated MLP so the (M, F) hidden activations never
-round-trip to HBM: grid (nM, nF), F minor-most; the (BM, D) output
-accumulator persists in VMEM scratch across the F loop and is flushed once
-per M block.  Arithmetic-intensity argument: the unfused pair reads/writes
-2*M*F hidden values through HBM; fusion removes that traffic entirely,
-which is what pushes this stage from memory- toward compute-bound at the
-d_ff sizes in the assigned configs.
+round-trip to HBM — and, inside each grid step, streams the hidden tile in
+``bs``-column sub-tiles so the gate product ``act(x@w1) * (x@w3)`` is never
+materialized wider than (bm, bs): each sub-tile is activated, gated, and
+immediately contracted against its w2 rows in a **single pass over the
+hidden dim**.  Grid (nM, nF), F minor-most; the (BM, D) output accumulator
+persists in VMEM scratch across the F loop and is flushed once per M block.
+
+Arithmetic-intensity argument: the unfused pair reads/writes 2*M*F hidden
+values through HBM; fusion removes that traffic entirely, and the sub-tile
+pass caps the live gate intermediate at bm*bs values, which is what lets
+the tuner push ``bf`` up (weight-reuse) without blowing the VMEM budget.
+
+Tile knobs (bm, bf, bs) are swept by ``kernels/tuning`` — see
+``space.py`` for the admissibility rules this kernel asserts.
 """
 from __future__ import annotations
 
@@ -17,9 +25,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.swiglu.ref import gate
+
 
 def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_scr, *,
-                   nf: int, act: str):
+                   nf: int, bs: int, act: str):
     fi = pl.program_id(1)
 
     @pl.when(fi == 0)
@@ -27,21 +37,22 @@ def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_scr, *,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     x = x_ref[...].astype(jnp.float32)         # (BM, D)
-    w1 = w1_ref[...].astype(jnp.float32)       # (D, BF)
-    w3 = w3_ref[...].astype(jnp.float32)
-    w2 = w2_ref[...].astype(jnp.float32)       # (BF, D)
-    h1 = jax.lax.dot_general(x, w1, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    h3 = jax.lax.dot_general(x, w3, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    if act == "silu":
-        g = h1 * jax.lax.logistic(h1)
-    else:  # tanh-approx gelu
-        g = 0.5 * h1 * (1.0 + jnp.tanh(0.7978845608028654 *
-                                       (h1 + 0.044715 * h1 * h1 * h1)))
-    h = g * h3                                  # (BM, BF)
-    acc_scr[...] += jax.lax.dot_general(h, w2, (((1,), (0,)), ((), ())),
-                                        preferred_element_type=jnp.float32)
+    bf = w1_ref.shape[1]
+    # Single pass over this grid step's hidden tile: activate, gate, and
+    # contract one (BM, bs) sub-tile at a time (static unroll, bf/bs small).
+    for j in range(bf // bs):
+        cols = slice(j * bs, (j + 1) * bs)
+        w1 = w1_ref[:, cols].astype(jnp.float32)   # (D, bs)
+        w3 = w3_ref[:, cols].astype(jnp.float32)
+        w2 = w2_ref[cols, :].astype(jnp.float32)   # (bs, D)
+        h1 = jax.lax.dot_general(x, w1, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        h3 = jax.lax.dot_general(x, w3, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        g = gate(h1, act) * h3                     # (BM, bs): never wider
+        acc_scr[...] += jax.lax.dot_general(
+            g, w2, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(fi == nf - 1)
     def _flush():
@@ -49,16 +60,19 @@ def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_scr, *,
 
 
 def swiglu_pallas(x, w1, w3, w2, *, act: str = "silu", bm: int = 128,
-                  bf: int = 512, interpret: bool = False):
-    """x (M, D); w1/w3 (D, F); w2 (F, D). M % bm == 0, F % bf == 0."""
+                  bf: int = 512, bs: int = 128, interpret: bool = False):
+    """x (M, D); w1/w3 (D, F); w2 (F, D). M % bm == 0, F % bf == 0,
+    bf % bs == 0 (after clamping each knob to its dim)."""
     M, D = x.shape
     F = w1.shape[1]
     bm = min(bm, M)
     bf = min(bf, F)
+    bs = min(bs, bf)
     assert M % bm == 0 and F % bf == 0, (M, bm, F, bf)
+    assert bf % bs == 0, (bf, bs)
     grid = (M // bm, F // bf)
     return pl.pallas_call(
-        functools.partial(_swiglu_kernel, nf=F // bf, act=act),
+        functools.partial(_swiglu_kernel, nf=F // bf, bs=bs, act=act),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, D), lambda mi, fi: (mi, 0)),

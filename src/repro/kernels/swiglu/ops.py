@@ -4,16 +4,32 @@ from __future__ import annotations
 import functools
 
 from repro import viscosity
+from repro.kernels import tuning
 from repro.kernels.swiglu import ref as _ref
 from repro.kernels.swiglu.kernel import swiglu_pallas
 
 
-def _hw(x, w1, w3, w2, *, act: str = "silu", interpret: bool = False):
-    M = x.shape[0]
-    bm = 128 if M % 128 == 0 else (8 if M % 8 == 0 else 1)
+def _hw(x, w1, w3, w2, *, act: str = "silu", interpret: bool = False,
+        bm=None, bf=None, bs=None):
+    M, D = x.shape
     F = w1.shape[1]
-    bf = 512 if F % 512 == 0 else (128 if F % 128 == 0 else F)
-    return swiglu_pallas(x, w1, w3, w2, act=act, bm=bm, bf=bf,
+    # Tuned tiles when the cache has an entry for this (shape, dtype,
+    # active routing plan); explicit knobs always win; no entry -> the
+    # historical hardcoded defaults.  Never fails: tuning.lookup is
+    # fail-open by construction.
+    if bm is None and bf is None and bs is None:
+        cfg = tuning.lookup("swiglu_mlp", "hw", (M, D, F), x.dtype) or {}
+    else:
+        cfg = {}
+    if bm is None:
+        bm = cfg.get("bm") or (128 if M % 128 == 0 else
+                               (8 if M % 8 == 0 else 1))
+    if bf is None:
+        bf = cfg.get("bf") or (512 if F % 512 == 0 else
+                               (128 if F % 128 == 0 else F))
+    if bs is None:
+        bs = cfg.get("bs") or (128 if min(bf, F) % 128 == 0 else bf)
+    return swiglu_pallas(x, w1, w3, w2, act=act, bm=bm, bf=bf, bs=bs,
                          interpret=interpret)
 
 

@@ -16,10 +16,54 @@ def _act(h, act: str):
     raise ValueError(act)
 
 
+def gate(h1, act: str):
+    """The kernel's exact activation arithmetic (shared so the blocked
+    oracle below is bit-for-bit the kernel's algorithm)."""
+    if act == "silu":
+        return h1 * jax.lax.logistic(h1)
+    if act == "gelu":  # tanh-approx gelu, the kernel's formula
+        return 0.5 * h1 * (1.0 + jnp.tanh(0.7978845608028654 *
+                                          (h1 + 0.044715 * h1 * h1 * h1)))
+    raise ValueError(act)
+
+
 def swiglu_ref(x, w1, w3, w2, *, act: str = "silu"):
     xf = x.astype(jnp.float32)
     h = _act(xf @ w1.astype(jnp.float32), act) * (xf @ w3.astype(jnp.float32))
     return (h @ w2.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_ref_blocked(x, w1, w3, w2, *, act: str = "silu", bm: int = 128,
+                       bf: int = 512, bs: int = 128):
+    """Pure-jnp replica of the Pallas kernel's *blocked* algorithm.
+
+    Same tiles, same dot shapes, same f32 accumulation order as
+    ``kernel.swiglu_pallas`` — so interpret-mode kernel output must match
+    this oracle **bit-for-bit** for every admissible (bm, bf, bs).  The
+    parity tests sweep the tuner's whole config space against it.
+    """
+    M, D = x.shape
+    F = w1.shape[1]
+    bm, bf = min(bm, M), min(bf, F)
+    bs = min(bs, bf)
+    assert M % bm == 0 and F % bf == 0 and bf % bs == 0, (M, bm, F, bf, bs)
+    def dot(a, b):  # the kernel's exact dot_general call
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    rows = []
+    for mi in range(M // bm):
+        xb = x[mi * bm:(mi + 1) * bm].astype(jnp.float32)
+        acc = jnp.zeros((bm, D), jnp.float32)
+        for fi in range(F // bf):
+            for j in range(bf // bs):
+                lo = fi * bf + j * bs
+                cols = slice(lo, lo + bs)
+                h1 = dot(xb, w1[:, cols].astype(jnp.float32))
+                h3 = dot(xb, w3[:, cols].astype(jnp.float32))
+                g = gate(h1, act) * h3
+                acc = acc + dot(g, w2[cols, :].astype(jnp.float32))
+        rows.append(acc.astype(x.dtype))
+    return jnp.concatenate(rows, axis=0)
 
 
 def swiglu_flops(M, D, F) -> int:

@@ -1,0 +1,161 @@
+"""Autotuned kernel block sizes (the ROADMAP "raw-speed program").
+
+Three pieces:
+
+  * ``space``  — per-(kernel, lowering-kind) search spaces + the MXU/grid
+    admissibility predicate;
+  * ``cache``  — deterministic on-disk JSON cache keyed by backend
+    fingerprint (and, per entry, by shape/dtype/routing-plan digest);
+  * ``tuner``  — sweep + hillclimb search (the ``launch/hillclimb.py``
+    loop, specialized to wall time).
+
+This module is the facade the kernel ``ops.py`` entry points consult:
+
+    cfg = tuning.lookup("swiglu_mlp", "hw", (M, D, F), x.dtype)
+    bm = (cfg or {}).get("bm", 128)
+
+``lookup`` is **fail-open by construction**: no cache file, no entry,
+corrupt JSON, different backend — every failure mode returns None and
+the kernel keeps its hardcoded default.  A missing tuning entry costs
+performance, never correctness.
+
+Plan-aware tuning: the Dispatcher wraps each plan-keyed build/call in
+``plan_scope(plan_key)``; lookups made while tracing under that scope
+first try the plan-specific entry, then fall back to the plan-agnostic
+``default`` entry.  A kernel running under a degraded RoutingPlan can
+therefore carry different tiles than the healthy one (RedMulE-FT's
+observation that fault-tolerance modes shift the throughput optimum).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.kernels.tuning import tuner as _tuner
+from repro.kernels.tuning.cache import (DEFAULT_PLAN, STATS, TuningCache,
+                                        backend_fingerprint, plan_digest,
+                                        shape_key)
+from repro.kernels.tuning.space import SPACES, admissible, space_for
+
+__all__ = [
+    "DEFAULT_PLAN", "SPACES", "TuningCache", "admissible",
+    "backend_fingerprint", "current_plan_key", "get_cache", "lookup",
+    "plan_digest", "plan_scope", "reset", "set_cache", "shape_key",
+    "space_for", "stats", "tune_kernel",
+]
+
+# ------------------------------------------------------------ plan scope
+_PLAN: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_tuning_plan", default=None)
+
+
+@contextlib.contextmanager
+def plan_scope(plan_key):
+    """Tag tuner lookups made inside with the active routing-plan key."""
+    token = _PLAN.set(plan_key)
+    try:
+        yield
+    finally:
+        _PLAN.reset(token)
+
+
+def current_plan_key():
+    return _PLAN.get()
+
+
+def scoped(plan_key, fn: Callable) -> Callable:
+    """``fn`` with every invocation run under ``plan_scope(plan_key)``
+    (how the Dispatcher threads its compile key to kernel lookups)."""
+
+    def call(*args, **kw):
+        with plan_scope(plan_key):
+            return fn(*args, **kw)
+
+    return call
+
+
+# --------------------------------------------------------- cache handle
+_CACHE: Optional[TuningCache] = None
+
+
+def get_cache() -> TuningCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = TuningCache()
+    return _CACHE
+
+
+def set_cache(cache: Optional[TuningCache]) -> None:
+    """Swap the process cache (tests point it at tmp dirs; None resets)."""
+    global _CACHE
+    _CACHE = cache
+
+
+def reset() -> None:
+    """Drop cache handle + stats (test isolation)."""
+    set_cache(None)
+    STATS.reset()
+
+
+def _enabled() -> bool:
+    return os.environ.get("REPRO_TUNER", "on").lower() not in (
+        "off", "0", "false")
+
+
+# -------------------------------------------------------------- lookups
+def lookup(kernel: str, kind: str, shape: Sequence[int], dtype
+           ) -> Optional[Dict[str, int]]:
+    """Tuned config for this call site, or None (use the defaults).
+
+    Tries the active plan-scope entry first, then the plan-agnostic
+    entry.  Counts hits/misses in ``stats()``.  Never raises.
+    """
+    if not _enabled():
+        return None
+    try:
+        cache = get_cache()
+        plan = plan_digest(current_plan_key())
+        cfg = cache.get(kernel, kind, shape, dtype, plan)
+        if cfg is None and plan != DEFAULT_PLAN:
+            cfg = cache.get(kernel, kind, shape, dtype, DEFAULT_PLAN)
+        if cfg is not None and not admissible(kernel, kind, cfg, shape):
+            cfg = None  # stale entry from an older space: ignore it
+        if cfg is None:
+            STATS.misses += 1
+        else:
+            STATS.hits += 1
+        return cfg
+    except Exception:
+        STATS.misses += 1
+        return None
+
+
+def stats() -> Dict[str, int]:
+    return STATS.as_dict()
+
+
+# --------------------------------------------------------------- tuning
+def tune_kernel(kernel: str, kind: str, shape: Sequence[int], dtype, *,
+                measure: Callable[[Dict[str, int]], float],
+                plan_key=None, budget: int = 24, persist: bool = True,
+                cache: Optional[TuningCache] = None,
+                log: Optional[Callable[[str], None]] = None
+                ) -> Tuple[Dict[str, int], float]:
+    """Run the sweep+hillclimb search and record the winner in the cache.
+
+    ``measure(cfg) -> us`` is the scoring callable (see
+    ``tuner.jax_measure`` for the standard jit-and-time closure).
+    Returns ``(best_cfg, best_us)``.
+    """
+    cache = cache or get_cache()
+    seed = cache.get(kernel, kind, shape, dtype, plan_digest(plan_key))
+    best_cfg, best_us, evals = _tuner.tune(
+        kernel, kind, shape, measure=measure,
+        seed_cfgs=(seed,) if seed else (), budget=budget, log=log)
+    cache.put(kernel, kind, shape, dtype, best_cfg,
+              plan=plan_digest(plan_key), us=best_us, evals=evals,
+              persist=persist)
+    STATS.tuned += 1
+    return best_cfg, best_us

@@ -1,0 +1,149 @@
+"""Sweep + hillclimb autotuner for kernel block sizes.
+
+The search loop is the same shape as ``launch/hillclimb.py``'s variant
+search — measure a baseline, measure candidates, keep the best, propose
+neighbors — specialized from roofline terms down to wall time:
+
+  1. **sweep**: measure every admissible config on a coarse grid (the
+     space's declared choices), capped by ``budget``;
+  2. **hillclimb**: from the sweep's argmin, walk one-knob/one-step
+     neighbors until no move improves (coordinate descent over the
+     choice lattice) or the budget runs out.
+
+Measurement is wall time, best-of-``reps`` after a warmup call (the
+warmup also pays compilation, so jit time never pollutes the score).
+The kernel's *current default* config is always seeded into the sweep,
+so a persisted tuned config is never worse than the default up to
+measurement noise.
+
+``tune`` accepts an injectable ``measure`` callable (tests drive the
+search with synthetic cost surfaces; no compilation needed).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.kernels.tuning.space import KernelSpace, space_for
+
+
+def measure_wall_us(fn: Callable[[], object], *, reps: int = 5,
+                    warmup: int = 1) -> float:
+    """Best-of-``reps`` wall time of ``fn()`` in microseconds.
+
+    ``fn`` must block until its result is ready (callers close over
+    ``jax.block_until_ready``); best-of suppresses scheduler noise, which
+    matters more than averaging for CI-grade comparisons.
+    """
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _as_key(cfg: Mapping[str, int]) -> Tuple[Tuple[str, int], ...]:
+    return tuple(sorted((k, int(v)) for k, v in cfg.items()))
+
+
+def tune(kernel: str, kind: str, shape: Sequence[int], *,
+         space: Optional[KernelSpace] = None,
+         measure: Callable[[Dict[str, int]], float],
+         seed_cfgs: Sequence[Mapping[str, int]] = (),
+         budget: int = 24,
+         log: Optional[Callable[[str], None]] = None
+         ) -> Tuple[Dict[str, int], float, int]:
+    """Search ``space`` for the fastest admissible config.
+
+    ``measure(cfg) -> us`` scores one config (lower is better); a config
+    whose measurement raises is discarded — a crashing tile choice must
+    never abort the search, the kernel simply keeps its default.
+
+    Returns ``(best_cfg, best_us, evals)``.  Raises only when *no*
+    config could be measured at all.
+    """
+    space = space or space_for(kernel, kind)
+    if space is None:
+        raise KeyError(f"no declared search space for ({kernel}, {kind})")
+    shape = tuple(int(d) for d in shape)
+
+    seen: Dict[Tuple, float] = {}
+    evals = 0
+
+    def score(cfg: Dict[str, int]) -> Optional[float]:
+        nonlocal evals
+        key = _as_key(cfg)
+        if key in seen:
+            return seen[key]
+        if evals >= budget:
+            return None
+        evals += 1
+        try:
+            us = float(measure(cfg))
+        except Exception as e:  # noqa: BLE001 - bad tile != failed search
+            if log:
+                log(f"tune[{kernel}/{kind}]: {cfg} failed: {e!r}")
+            seen[key] = float("inf")
+            return None
+        seen[key] = us
+        if log:
+            log(f"tune[{kernel}/{kind}]: {cfg} -> {us:.1f}us")
+        return us
+
+    # ----------------------------------------------------------- sweep
+    candidates = []
+    for cfg in seed_cfgs:
+        if space.admissible(cfg, shape):
+            candidates.append(dict(cfg))
+    if space.defaults and space.admissible(space.defaults, shape):
+        candidates.append(dict(space.defaults))
+    candidates.extend(space.configs(shape))
+
+    best_cfg: Optional[Dict[str, int]] = None
+    best_us = float("inf")
+    for cfg in candidates:
+        us = score(cfg)
+        if us is not None and us < best_us:
+            best_cfg, best_us = cfg, us
+        if evals >= budget:
+            break
+    if best_cfg is None:
+        raise RuntimeError(
+            f"tuner measured no admissible config for {kernel}/{kind} "
+            f"shape={shape} within budget={budget}")
+
+    # ------------------------------------------------------- hillclimb
+    improved = True
+    while improved and evals < budget:
+        improved = False
+        for cand in space.neighbors(best_cfg, shape):
+            us = score(cand)
+            if us is not None and us < best_us:
+                best_cfg, best_us = cand, us
+                improved = True
+                break  # greedy: re-propose around the new optimum
+    return best_cfg, best_us, evals
+
+
+def jax_measure(make_fn: Callable[[Dict[str, int]], Callable],
+                args: Tuple, *, reps: int = 5
+                ) -> Callable[[Dict[str, int]], float]:
+    """Standard measure closure: build + jit per config, time blocked.
+
+    ``make_fn(cfg)`` returns a callable over ``args`` (typically a
+    ``jax.jit`` with the config's tile sizes baked in as static values).
+    """
+    import jax
+
+    def _measure(cfg: Dict[str, int]) -> float:
+        fn = make_fn(cfg)
+
+        def call():
+            return jax.block_until_ready(fn(*args))
+
+        return measure_wall_us(call, reps=reps)
+
+    return _measure

@@ -72,6 +72,7 @@ def initialize_runtime(
     process_id: int = 0,
     *,
     cpu_collectives: Optional[str] = "gloo",
+    xla_preset: Optional[str] = "auto",
 ) -> DistributedRuntime:
     """Wrap ``jax.distributed.initialize`` for the fleet runtime.
 
@@ -83,8 +84,18 @@ def initialize_runtime(
     real launches.  ``cpu_collectives`` selects the CPU cross-process
     collective backend (gloo) where this jax exposes the knob — without
     it, CPU cross-process *computations* fail but the coordination
-    service (and so ``KVCoordinator``) still works.
+    service (and so ``KVCoordinator``) still works.  ``xla_preset``
+    merges the per-backend XLA flag preset (``launch/xla_presets.py``)
+    before jax initializes — "auto" infers the backend from the
+    environment pin, an explicit name selects that preset, and None
+    skips the layer entirely (ad-hoc ``XLA_FLAGS`` mutation is not a
+    supported path; the preset layer is the one config surface).
     """
+    from repro.launch import xla_presets
+
+    if xla_preset is not None:
+        xla_presets.apply(None if xla_preset == "auto" else xla_preset)
+
     import jax
 
     if num_processes <= 1 and coordinator_address is None:

@@ -1,7 +1,7 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+from repro.launch.xla_presets import force_host_device_count
+force_host_device_count(512)
 # ^ MUST precede any jax import: jax locks the device count on first init.
+import os
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this driver builds the real jitted program (train_step with

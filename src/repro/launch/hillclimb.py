@@ -1,6 +1,5 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+from repro.launch.xla_presets import force_host_device_count
+force_host_device_count(512)  # MUST precede any jax import (dry-run mesh)
 """§Perf hillclimb runner: baseline vs variant roofline comparison.
 
 Usage:
@@ -9,12 +8,35 @@ Usage:
 
 Artifacts are tagged ``@<variant>`` next to the baselines; the comparison
 table prints the three roofline terms and the dominant-term delta.
+
+The sweep/measure/keep-best loop here is the template the kernel
+autotuner (``repro.kernels.tuning``) specializes down to block-size wall
+time; this runner stays the whole-program (roofline-level) instance.
 """
 import argparse
+import contextlib
 import dataclasses
 
 from repro.launch import dryrun
 from repro.launch.variants import VARIANTS, variant_mesh
+
+
+@contextlib.contextmanager
+def patched_dryrun(build, make_mesh):
+    """Swap ``dryrun.build_lowered`` / ``make_production_mesh`` for the
+    duration of one search step — exception-safe, so a mid-search crash
+    can never leave ``dryrun`` permanently monkey-patched (a patched
+    module would silently poison every later baseline in this process).
+    """
+    orig_build = dryrun.build_lowered
+    orig_mesh = dryrun.make_production_mesh
+    dryrun.build_lowered = build
+    dryrun.make_production_mesh = make_mesh
+    try:
+        yield
+    finally:
+        dryrun.build_lowered = orig_build
+        dryrun.make_production_mesh = orig_mesh
 
 
 def run_variant(arch: str, shape: str, variant: str, *, multi_pod=False,
@@ -26,9 +48,7 @@ def run_variant(arch: str, shape: str, variant: str, *, multi_pod=False,
         cfg = get_config(arch)
         overrides["moe"] = dataclasses.replace(cfg.moe, combine_first=True)
 
-    # monkey-patch the mesh/rules/axes into run_cell via build_lowered
     orig_build = dryrun.build_lowered
-    orig_mesh = dryrun.make_production_mesh
 
     def build(arch_, shape_, mesh_, **kw):
         kw["rules"] = v.get("rules", kw.get("rules"))
@@ -36,17 +56,14 @@ def run_variant(arch: str, shape: str, variant: str, *, multi_pod=False,
         kw.update(v.get("train_kw", {}))
         return orig_build(arch_, shape_, mesh_, **kw)
 
-    try:
-        dryrun.build_lowered = build
-        dryrun.make_production_mesh = \
-            lambda *, multi_pod=False: variant_mesh(v, multi_pod)
+    def make_mesh(*, multi_pod=False):
+        return variant_mesh(v, multi_pod)
+
+    with patched_dryrun(build, make_mesh):
         rec = dryrun.run_cell(arch, shape, multi_pod,
                               microbatch=microbatch or v.get("microbatch"),
                               overrides=overrides,
                               force=force, tag=f"@{variant}")
-    finally:
-        dryrun.build_lowered = orig_build
-        dryrun.make_production_mesh = orig_mesh
     return rec
 
 

@@ -1,0 +1,128 @@
+"""Per-backend XLA-flag presets: THE place ``XLA_FLAGS`` is written.
+
+Every runner used to mutate ``os.environ["XLA_FLAGS"]`` ad hoc (and the
+dry-run prepended its device-count flag on every import, accumulating
+duplicates).  This module is the config layer instead:
+
+  * ``PRESETS`` declares the per-backend flag sets — the GPU set is the
+    latency-hiding scheduler / async collectives / triton-gemm trio
+    (jax gpu_performance_tips; the bayespec exemplar in SNIPPETS.md);
+  * ``apply()`` merges a preset into ``XLA_FLAGS`` **idempotently**:
+    flags are deduped by name and an already-set flag keeps its value,
+    so a user's explicit environment always wins;
+  * ``force_host_device_count(n)`` is the one knob the CPU dry-run
+    stack needs (512 virtual host devices).
+
+Import rules: this module must stay importable *before* jax (no jax
+import at module scope) — callers apply presets, then import jax.
+Writing ``XLA_FLAGS`` after jax initialized its backends is a silent
+no-op, so ``apply`` records what it did (``applied_presets``) and the
+callers that own process startup (``launch/dryrun.py``,
+``launch/hillclimb.py``, ``launch/distributed.initialize_runtime``,
+``benchmarks/run.py``) call it first thing.
+
+No other module may write ``os.environ["XLA_FLAGS"]``; the only
+exceptions are generated subprocess scripts in tests, which are their
+own process entry points.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# jax gpu_performance_tips flag set (communication/compute overlap +
+# triton gemm autotuning) — see SNIPPETS.md (bayespec config.py).
+GPU_PRESET: Tuple[str, ...] = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+)
+
+# CPU/TPU carry no blanket flags: the CPU stack's only knob is the
+# virtual device count (see force_host_device_count), and TPU's
+# latency-hiding defaults are already on in current libtpu — an unknown
+# flag in XLA_FLAGS is a *fatal* init error, so presets only list flags
+# known-good for their backend.
+CPU_PRESET: Tuple[str, ...] = ()
+TPU_PRESET: Tuple[str, ...] = ()
+
+PRESETS: Dict[str, Tuple[str, ...]] = {
+    "gpu": GPU_PRESET,
+    "cuda": GPU_PRESET,
+    "rocm": GPU_PRESET,
+    "cpu": CPU_PRESET,
+    "tpu": TPU_PRESET,
+}
+
+# What apply() actually merged this process (introspection / tests).
+applied_presets: List[str] = []
+
+
+def _flag_name(flag: str) -> str:
+    return flag.split("=", 1)[0]
+
+
+def _merge(existing: str, new_flags: Iterable[str]) -> str:
+    """Append flags whose *names* are not already present (user wins)."""
+    parts = [p for p in existing.split() if p]
+    have = {_flag_name(p) for p in parts}
+    for flag in new_flags:
+        if _flag_name(flag) not in have:
+            parts.append(flag)
+            have.add(_flag_name(flag))
+    return " ".join(parts)
+
+
+def detect_backend() -> str:
+    """Best pre-jax backend guess: the JAX_PLATFORMS pin, else cpu.
+
+    Deliberately conservative — presets are opt-in per backend, and
+    guessing "gpu" on a cpu host would inject flags that are never
+    exercised.  Runners that know their backend pass it explicitly.
+    """
+    plat = os.environ.get("JAX_PLATFORMS") or os.environ.get("JAX_PLATFORM_NAME")
+    if plat:
+        return plat.split(",")[0].strip().lower() or "cpu"
+    return "cpu"
+
+
+def preset_flags(backend: Optional[str] = None) -> Tuple[str, ...]:
+    backend = (backend or detect_backend()).lower()
+    return PRESETS.get(backend, ())
+
+
+def apply(backend: Optional[str] = None, *,
+          host_device_count: Optional[int] = None,
+          extra_flags: Iterable[str] = ()) -> str:
+    """Merge the backend preset (+ extras) into ``XLA_FLAGS``.
+
+    Idempotent; returns the final ``XLA_FLAGS`` value.  If jax is already
+    imported the merge still happens (harmless) but is recorded with a
+    ``late:`` marker so tests can flag ordering bugs.
+    """
+    backend = (backend or detect_backend()).lower()
+    flags = list(preset_flags(backend))
+    if host_device_count is not None:
+        flags.append(
+            f"--xla_force_host_platform_device_count={int(host_device_count)}")
+    flags.extend(extra_flags)
+    merged = _merge(os.environ.get("XLA_FLAGS", ""), flags)
+    if merged:
+        os.environ["XLA_FLAGS"] = merged
+    tag = f"{backend}:{len(flags)}"
+    if "jax" in sys.modules:
+        tag = "late:" + tag
+    applied_presets.append(tag)
+    return merged
+
+
+def force_host_device_count(n: int) -> str:
+    """The dry-run stack's knob: ``n`` virtual CPU devices.
+
+    Must run before the first jax import (jax locks the device count on
+    backend init); keeps any count already pinned in the environment.
+    """
+    return apply("cpu", host_device_count=n)

@@ -1,0 +1,109 @@
+"""Swept-config parity: every block size the tuner may pick is bit-exact.
+
+The tuner's contract is "a tuning entry costs performance, never
+correctness" — so the interpret-mode kernels must match their blocked
+jnp oracles **bit-for-bit** for *every* admissible config in the search
+space, not just the default.  The oracles are ``jax.jit``'d: interpret
+mode executes the kernel body under jit, where XLA fuses multiply-adds;
+an eager oracle differs by one ulp, a jitted one does not.
+
+Softcap is the one exception: tanh/divide fuse differently across the
+two programs, so those cases assert a 1e-6 tolerance instead.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref_blocked
+from repro.kernels.swiglu.kernel import swiglu_pallas
+from repro.kernels.swiglu.ref import swiglu_ref_blocked
+from repro.kernels.tuning.space import space_for
+
+# Small shapes: interpret mode jit-compiles per config, so the sweep must
+# stay cheap.  (M, D, F) for swiglu; (B, Sq, Skv, H, Hkv, D) for flash —
+# Hkv < H exercises the GQA head mapping.
+SWIGLU_SHAPE = (16, 32, 256)
+FLASH_SHAPE = (1, 32, 32, 2, 1, 8)
+
+
+def _swiglu_configs():
+    M, _D, F = SWIGLU_SHAPE
+    seen, out = set(), []
+    for cfg in space_for("swiglu_mlp", "hw").configs(SWIGLU_SHAPE):
+        # clamp exactly like the kernel does; dedupe the clamped tiles
+        bm, bf = min(cfg["bm"], M), min(cfg["bf"], F)
+        bs = min(cfg["bs"], bf)
+        if (bm, bf, bs) not in seen:
+            seen.add((bm, bf, bs))
+            out.append(cfg)
+    return out
+
+
+def _flash_configs():
+    return list(space_for("flash_attention", "hw").configs(FLASH_SHAPE))
+
+
+def _swiglu_args(rng):
+    M, D, F = SWIGLU_SHAPE
+    x = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(D, F)) * 0.1, jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(D, F)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(F, D)) * 0.1, jnp.float32)
+    return x, w1, w3, w2
+
+
+def _flash_args(rng):
+    B, Sq, Skv, H, Hkv, D = FLASH_SHAPE
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Skv, D)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("cfg", _swiglu_configs(),
+                         ids=lambda c: f"bm{c['bm']}bf{c['bf']}bs{c['bs']}")
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_swiglu_bitexact_across_sweep(rng, cfg, act):
+    args = _swiglu_args(rng)
+    ref = jax.jit(functools.partial(swiglu_ref_blocked, act=act, **cfg))(
+        *args)
+    out = swiglu_pallas(*args, act=act, interpret=True, **cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("cfg", _flash_configs(),
+                         ids=lambda c: f"bq{c['bq']}bk{c['bk']}")
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_bitexact_across_sweep(rng, cfg, causal):
+    args = _flash_args(rng)
+    ref = jax.jit(functools.partial(attention_ref_blocked, causal=causal,
+                                    **cfg))(*args)
+    out = flash_attention_bhsd(*args, causal=causal, interpret=True, **cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("cfg", [{"bq": 8, "bk": 16}, {"bq": 32, "bk": 8}])
+def test_flash_window_bitexact(rng, cfg):
+    args = _flash_args(rng)
+    ref = jax.jit(functools.partial(attention_ref_blocked, causal=True,
+                                    window=16, **cfg))(*args)
+    out = flash_attention_bhsd(*args, causal=True, window=16,
+                               interpret=True, **cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_flash_softcap_close(rng):
+    # tanh lowers through different fusions in the two programs: 1 ulp
+    # scale differences amplified by exp, so tolerance instead of bitwise
+    args = _flash_args(rng)
+    cfg = {"bq": 16, "bk": 16}
+    ref = jax.jit(functools.partial(attention_ref_blocked, causal=True,
+                                    softcap=30.0, **cfg))(*args)
+    out = flash_attention_bhsd(*args, causal=True, softcap=30.0,
+                               interpret=True, **cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
