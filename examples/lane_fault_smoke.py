@@ -1,0 +1,102 @@
+"""One lane-fault scenario, end to end — the tier-1 CI fault smoke.
+
+A stuck-at lane fault is injected into the swiglu kernel's optimized
+path, the canary checker detects AND lane-localizes it, routing walks
+the degradation ladder (DEGRADED remap, then reduced-width on a second
+fault), and the remapped output is checked bit-identical to an
+uninjected run under the same plan — the paper's partial-degradation
+claim (§III-A) exercised through the real registries, not mocks.
+
+Run:  PYTHONPATH=src python examples/lane_fault_smoke.py
+
+Prints a JSON summary; exits nonzero on any failed check.
+"""
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CanaryChecker, FaultState, RoutingPlan, Stage
+from repro.kernels.swiglu import ops as _swiglu_ops  # noqa: F401 — registers
+from repro.viscosity import (DEGRADED_REDUCED, DEGRADED_REMAP, INTERPRET,
+                             REGISTRY, lanefault)
+
+STAGE = "swiglu_mlp"
+PORTS = (jax.ShapeDtypeStruct((64, 64), jnp.float32),
+         jax.ShapeDtypeStruct((64, 128), jnp.float32),
+         jax.ShapeDtypeStruct((64, 128), jnp.float32),
+         jax.ShapeDtypeStruct((128, 64), jnp.float32))
+
+
+def main() -> int:
+    lanefault.reset()
+    spec = REGISTRY.get(STAGE)
+    stage = Stage(name=STAGE, spec=spec, ports=PORTS,
+                  tol=max(spec.tol, 1e-3))
+    x = stage.canary_inputs(seed=7)
+    fault = lanefault.LaneFault(kind=lanefault.STUCK, lanes=(3, 7), width=64)
+    summary = {"stage": STAGE, "injected_lanes": list(fault.lanes)}
+    checks = {}
+
+    plan = RoutingPlan.for_stages([STAGE], target=INTERPRET)
+    sw = np.asarray(stage.run(*x, route=lanefault.SW))
+    clean = np.asarray(stage.run(*x, route=plan))
+
+    with lanefault.inject(STAGE, fault):
+        # 1) the fault is real: the optimized path's output is corrupted
+        bad = np.asarray(stage.run(*x, route=plan))
+        checks["injection_corrupts"] = bool(np.abs(bad - clean).max() > 0)
+
+        # 2) canary detects and lane-localizes it
+        state = FaultState()
+        chk = CanaryChecker([stage], route_hw=INTERPRET, localize=True)
+        found = chk.sweep(state, step=1)
+        located = lanefault.fault_map(STAGE)
+        checks["canary_detects"] = found == [STAGE]
+        checks["canary_localizes"] = (
+            located is not None and located.lanes == fault.lanes
+            and state.log[-1]["kind"] == "canary_localized")
+        if located is None:
+            print(json.dumps({**summary, "checks": checks, "ok": False}))
+            return 1
+
+        # 3) fault 1 -> DEGRADED remap; healed output is bit-identical to
+        #    an uninjected run under the SAME degraded plan
+        dplan = lanefault.degraded_plan(
+            plan, state.counts([STAGE])).validate(registry=REGISTRY)
+        checks["routes_degraded_remap"] = (
+            dplan.target_for(STAGE) == DEGRADED_REMAP)
+        healed = np.asarray(stage.run(*x, route=dplan))
+        checks["remap_close_to_oracle"] = bool(
+            np.abs(healed - sw).max() <= stage.tol)
+
+        # 4) fault 2 -> reduced-width execution, still within tolerance
+        state.mark(STAGE, kind="canary_localized", step=2)
+        dplan2 = lanefault.degraded_plan(
+            plan, state.counts([STAGE])).validate(registry=REGISTRY)
+        checks["routes_degraded_reduced"] = (
+            dplan2.target_for(STAGE) == DEGRADED_REDUCED)
+        reduced = np.asarray(stage.run(*x, route=dplan2))
+        checks["reduced_close_to_oracle"] = bool(
+            np.abs(reduced - sw).max() <= stage.tol)
+
+    # bit-identity across injection: corruption confined to mapped lanes
+    # is healed exactly (traced fresh on both sides of the context)
+    healed_clean = np.asarray(stage.run(*x, route=dplan))
+    checks["remap_bit_identical"] = bool(np.array_equal(healed, healed_clean))
+
+    # 5) deterministic log stamps: logical (step, origin, seq), no wall clock
+    checks["log_is_logical"] = all(
+        set(e) == {"stage", "replica", "kind", "step", "origin", "seq"}
+        for e in state.log)
+
+    lanefault.reset()
+    ok = all(checks.values())
+    print(json.dumps({**summary, "checks": checks, "ok": ok}, indent=2))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

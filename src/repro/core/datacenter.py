@@ -21,6 +21,77 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.viscosity.lang import (DEGRADED_REDUCED, DEGRADED_REMAP,
+                                  DEGRADED_TARGETS)
+
+
+@dataclass(frozen=True)
+class DegradationModel:
+    """VFA degradation refined to per-(stage, rung) partial throughput.
+
+    The scalar curve (``curve[k]`` = relative throughput with k SW-
+    quarantined faults) stays the coarse backbone, but a fault absorbed by
+    the DEGRADED route family costs a *partial* factor instead of a full
+    curve step: a remapped stage runs the kernel at full width plus an
+    oracle patch (mild overhead), a reduced-width stage loses lanes
+    proportionally.  ``factor`` composes the two: rung-absorbed faults are
+    removed from the curve index (remap absorbs 1 fault, reduced-width 2 —
+    its ladder position) and charged their per-stage partial factor
+    instead.  With no rungs this reduces exactly to the legacy scalar
+    model, so existing Fig. 2 curves are unchanged.
+    """
+
+    curve: Tuple[float, ...] = (1.0, 0.38, 0.19)
+    # ((stage, rung), factor) overrides; rung is a DEGRADED target string.
+    partial: Tuple[Tuple[Tuple[str, str], float], ...] = ()
+    remap_default: float = 0.85
+    reduced_default: float = 0.6
+
+    # Ladder position of each rung = faults it has absorbed.
+    RUNG_WEIGHTS = {DEGRADED_REMAP: 1, DEGRADED_REDUCED: 2}
+
+    def __post_init__(self):
+        object.__setattr__(self, "curve", tuple(self.curve))
+        object.__setattr__(self, "partial",
+                           tuple(sorted((tuple(k), float(v))
+                                        for k, v in self.partial)))
+        for (_, rung), _f in self.partial:
+            if rung not in DEGRADED_TARGETS:
+                raise ValueError(f"partial factor names unknown rung "
+                                 f"{rung!r}; expected {DEGRADED_TARGETS}")
+
+    def partial_factor(self, stage: str, rung: str) -> float:
+        for (s, r), f in self.partial:
+            if s == stage and r == rung:
+                return f
+        return (self.remap_default if rung == DEGRADED_REMAP
+                else self.reduced_default)
+
+    def factor(self, n_faults: int,
+               rungs: Sequence[Tuple[str, str]] = ()) -> float:
+        """Relative throughput of a device with ``n_faults`` total faults
+        of which ``rungs`` (stage, DEGRADED-target) pairs are absorbed by
+        the ladder; the remainder are full SW quarantines on the curve."""
+        absorbed = sum(self.RUNG_WEIGHTS.get(r, 0) for _, r in rungs)
+        k_sw = max(0, int(n_faults) - absorbed)
+        f = self.curve[min(k_sw, len(self.curve) - 1)]
+        for s, r in rungs:
+            f *= self.partial_factor(s, r)
+        return f
+
+    def slot_cap(self, slots_per_device: int, n_faults: int,
+                 rungs: Sequence[Tuple[str, str]] = ()) -> int:
+        """Serve-engine slot quantization of ``factor`` (same rounding as
+        the legacy scalar path, so the analytic twin stays slot-exact)."""
+        return round(slots_per_device * self.factor(n_faults, rungs))
+
+    @staticmethod
+    def rungs_of(plan) -> Tuple[Tuple[str, str], ...]:
+        """The (stage, rung) pairs a RoutingPlan currently assigns to the
+        DEGRADED family (the ``rungs`` argument ``factor`` expects)."""
+        return tuple((s, t) for s, t in plan.assignments
+                     if t in DEGRADED_TARGETS)
+
 
 @dataclass
 class FleetResult:
@@ -156,7 +227,9 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
                  slots_per_device: int = 1,
                  steps_per_tick: int = 1,
                  n_hosts: int = 1,
-                 host_loss: Optional[Mapping[int, int]] = None
+                 host_loss: Optional[Mapping[int, int]] = None,
+                 model: Optional[DegradationModel] = None,
+                 lane_mapped: Sequence[str] = ()
                  ) -> TraceReplay:
     """Mirror of the FleetPlan transition semantics over a fault trace.
 
@@ -167,6 +240,14 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
     schedule and the analytic capacity curve in *slots* (quantized the
     same way ``FleetConfig.capacity_for`` quantizes the serve engine),
     so measured-vs-analytic comparisons are slot-exact.
+
+    With a ``model`` (DegradationModel) and ``lane_mapped`` stages the
+    mirror walks the same degradation ladder ``FleetPlan.with_stage_fault``
+    walks: repeated faults land on an already-degraded lane-mapped stage
+    first (remap -> reduced width -> SW oracle), each rung charged its
+    partial factor instead of a full curve step; unmapped stages quarantine
+    binarily as before.  Device death still triggers at ``max_faults``
+    total faults.
 
     ``n_hosts`` adds the multi-host axis: the ``n_workers + n_spares``
     devices partition into contiguous per-host blocks (must divide
@@ -179,11 +260,15 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
     engine fold the same event log.
     """
     deg = list(degradation)
-    if max_faults > len(stage_names) + 1:
+    if model is None and max_faults > len(stage_names) + 1:
+        # Ladder runs absorb several faults on one stage, so the one-
+        # stage-per-fault headroom guard only applies to the binary path.
         raise ValueError(
             f"max_faults={max_faults} needs at least {max_faults - 1} "
             f"stages to quarantine one per fault before device death; "
             f"model has {len(stage_names)}: {list(stage_names)}")
+    lane_mapped = tuple(lane_mapped)
+    n_rungs = len(DegradationModel.RUNG_WEIGHTS) + 1   # remap/reduced/SW
     n_devices = n_workers + n_spares
     if n_hosts < 1 or n_devices % n_hosts:
         raise ValueError(f"{n_devices} device(s) do not partition into "
@@ -199,6 +284,36 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
         return round(slots_per_device * deg[min(k, len(deg) - 1)])
 
     faults = {d: 0 for d in range(n_devices)}     # fallback stages per dev
+    scounts: Dict[int, Dict[str, int]] = {d: {} for d in range(n_devices)}
+
+    def _pick(c: int) -> str:
+        """Stage the next fault on device ``c`` hits — mirrors the engine:
+        an already-degraded lane-mapped stage keeps absorbing faults until
+        its ladder bottoms out at SW, then the next untouched stage."""
+        if model is not None:
+            for s in stage_names:
+                if s in lane_mapped and 0 < scounts[c].get(s, 0) < n_rungs:
+                    return s
+            for s in stage_names:
+                if scounts[c].get(s, 0) == 0:
+                    return s
+            return stage_names[-1]
+        return stage_names[min(faults[c], len(stage_names) - 1)]
+
+    def _rungs(c: int) -> Tuple[Tuple[str, str], ...]:
+        """(stage, rung) pairs currently DEGRADED on device ``c`` (counts
+        past the ladder are full SW quarantines, not rungs)."""
+        out = []
+        for s, k in sorted(scounts[c].items()):
+            if s in lane_mapped and 0 < k < n_rungs:
+                out.append((s, (DEGRADED_REMAP, DEGRADED_REDUCED)[k - 1]))
+        return tuple(out)
+
+    def device_cap(d: int) -> float:
+        if model is not None:
+            return model.slot_cap(slots_per_device, faults[d], _rungs(d))
+        return slot_cap(faults[d])
+
     serving = set(range(n_workers))
     free_spares = list(range(n_workers, n_devices))
     dead: set = set()
@@ -232,23 +347,24 @@ def replay_trace(trace: Sequence[Tuple[int, int]], *, n_workers: int,
                 spare = free_spares.pop(0)
                 serving.discard(c)
                 serving.add(spare)
-                events.setdefault(step, []).append(
-                    ("stage", c, stage_names[min(faults[c],
-                                                 len(stage_names) - 1)]))
+                stage = _pick(c)
+                events.setdefault(step, []).append(("stage", c, stage))
+                scounts[c][stage] = scounts[c].get(stage, 0) + 1
                 faults[c] += 1
             elif faults[c] + 1 >= max_faults:
                 serving.discard(c)
                 dead.add(c)
                 events.setdefault(step, []).append(("device", c))
             else:
-                events.setdefault(step, []).append(
-                    ("stage", c, stage_names[min(faults[c],
-                                                 len(stage_names) - 1)]))
+                stage = _pick(c)
+                events.setdefault(step, []).append(("stage", c, stage))
+                scounts[c][stage] = scounts[c].get(stage, 0) + 1
                 faults[c] += 1
-        capacity[t] = sum(slot_cap(faults[d]) for d in serving)
+        capacity[t] = sum(device_cap(d) for d in serving)
+    healthy_slot = (model.slot_cap(slots_per_device, 0) if model is not None
+                    else slot_cap(0))
     return TraceReplay(events=events, capacity=capacity,
-                       healthy_capacity=float(n_workers *
-                                              slot_cap(0)),
+                       healthy_capacity=float(n_workers * healthy_slot),
                        n_dropped=n_dropped)
 
 

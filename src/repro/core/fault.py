@@ -19,20 +19,30 @@ Injection: ``FaultInjector`` corrupts a stage's HW path deterministically
 """
 from __future__ import annotations
 
-import time
+import logging
 from dataclasses import dataclass
-from typing import Callable, Dict, FrozenSet, List, Sequence, Tuple
+from typing import (Callable, Dict, FrozenSet, Iterable, List, Mapping,
+                    Optional, Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.checksum import checksum_tree
+from repro.viscosity import lanefault
 from repro.viscosity.lang import HW, SW
 from repro.core.stage import Stage
 
+log = logging.getLogger(__name__)
+
 OK = "ok"
 FAULT = "fault"
+
+# Errors a detector may legitimately *interpret as a fault* when a stage's
+# HW path raises them (numeric/shape breakage of the kind a defective
+# datapath produces).  Anything else propagates — a fail-open
+# ``except Exception`` here once swallowed genuine bugs silently.
+EXPECTED_STAGE_ERRORS = (ValueError, TypeError, ArithmeticError)
 
 
 @dataclass(frozen=True)
@@ -59,20 +69,79 @@ class FaultSignature:
         return len(self.faulty())
 
 
+def _log_key(entry: Mapping) -> Tuple[int, str, int]:
+    """Total order over fault-log entries: (step, origin, seq).  Logical —
+    no wall clock anywhere, so two runs that observe the same events in any
+    interleaving produce identical merged logs."""
+    return (int(entry.get("step", 0)), str(entry.get("origin", "")),
+            int(entry.get("seq", 0)))
+
+
 class FaultState:
-    """Mutable fleet-side health registry: (stage, replica) -> status."""
+    """Mutable fleet-side health registry: (stage, replica) -> status.
 
-    def __init__(self):
+    Log entries carry **logical stamps** ``(step, origin, seq)`` — the same
+    total order FleetEvent uses — never wall-clock time: a fault log must
+    be a deterministic function of the event sequence, reproducible across
+    replays and identical across replicas that saw the same events.
+    """
+
+    def __init__(self, origin: str = "local"):
         self._bad: Dict[Tuple[str, int], str] = {}
+        self._counts: Dict[Tuple[str, int], int] = {}
         self.log: List[dict] = []
+        self.origin = origin
+        self._seq = 0
 
-    def mark(self, stage: str, replica: int = 0, kind: str = "detected"):
+    def _stamp(self, step: int) -> Dict:
+        self._seq += 1
+        return {"step": int(step), "origin": self.origin, "seq": self._seq}
+
+    def mark(self, stage: str, replica: int = 0, kind: str = "detected",
+             step: int = 0) -> dict:
         self._bad[(stage, replica)] = FAULT
-        self.log.append({"stage": stage, "replica": replica, "kind": kind,
-                         "t": time.time()})
+        self._counts[(stage, replica)] = self.count(stage, replica) + 1
+        entry = {"stage": stage, "replica": replica, "kind": kind,
+                 **self._stamp(step)}
+        self.log.append(entry)
+        return entry
+
+    def note(self, stage: str, replica: int = 0, kind: str = "note",
+             step: int = 0) -> dict:
+        """Log-only event (no quarantine, no fault count) with the same
+        deterministic stamp — e.g. a nan-guard trip the runner handles."""
+        entry = {"stage": stage, "replica": replica, "kind": kind,
+                 **self._stamp(step)}
+        self.log.append(entry)
+        return entry
+
+    def observe(self, entry: Mapping) -> dict:
+        """Fold one remote replica's log entry into this registry (marks
+        the (stage, replica) and appends the entry verbatim — the remote
+        origin/seq stamp is preserved so merged logs dedup exactly)."""
+        e = dict(entry)
+        self._bad[(e["stage"], e.get("replica", 0))] = FAULT
+        self._counts[(e["stage"], e.get("replica", 0))] = (
+            self.count(e["stage"], e.get("replica", 0)) + 1)
+        self.log.append(e)
+        return e
 
     def is_faulty(self, stage: str, replica: int = 0) -> bool:
         return self._bad.get((stage, replica)) == FAULT
+
+    def count(self, stage: str, replica: int = 0) -> int:
+        """Faults accumulated on one (stage, replica) — the degradation-
+        ladder rung index."""
+        return self._counts.get((stage, replica), 0)
+
+    def counts(self, stage_names: Optional[Iterable[str]] = None,
+               replica: int = 0) -> Dict[str, int]:
+        """Per-stage fault counts for ``replica`` (the input to
+        ``lanefault.degraded_plan``)."""
+        if stage_names is not None:
+            return {s: self.count(s, replica) for s in stage_names}
+        return {s: c for (s, r), c in sorted(self._counts.items())
+                if r == replica}
 
     def signature(self, stage_names: Sequence[str], replica: int = 0
                   ) -> FaultSignature:
@@ -86,8 +155,29 @@ class FaultState:
         return sum(1 for (s, r), v in self._bad.items()
                    if r == replica and v == FAULT)
 
+    @staticmethod
+    def merge_logs(*logs: Sequence[Mapping]) -> List[dict]:
+        """Deterministic union of per-replica logs: sorted by the logical
+        (step, origin, seq) stamp, deduplicated on it.  Any interleaving of
+        the same events merges to the identical list."""
+        seen, out = set(), []
+        for e in sorted((dict(e) for lg in logs for e in lg), key=_log_key):
+            k = _log_key(e)
+            if k not in seen:
+                seen.add(k)
+                out.append(e)
+        return out
+
 
 # ------------------------------------------------------------- injection
+class InjectionNoOpError(RuntimeError):
+    """An injected corruption left the output bit-identical to the clean
+    run.  A silent no-op injection (bitflip of a zero element, stuck-zero
+    on an already-zero lane) makes a detection test vacuous — it "passes"
+    because nothing was ever wrong.  Raised eagerly so the harness knows
+    the experiment is invalid, not green."""
+
+
 @dataclass
 class FaultInjector:
     """Wraps a stage's HW path with a deterministic corruption."""
@@ -103,15 +193,34 @@ class FaultInjector:
                 return x.at[..., 0].set(0.0) if x.ndim else x * 0
             if self.kind == "gain":
                 return x * (1.0 + self.magnitude)
-            # bitflip: flip the sign of one fixed element
+            # bitflip: corrupt one fixed element.  Sign-flip alone is a
+            # silent no-op on a zero element, so zeros flip to ``magnitude``
+            # instead — the corruption is guaranteed to change the value.
             flat = x.reshape(-1)
-            flat = flat.at[flat.shape[0] // 2].multiply(-1.0)
-            return flat.reshape(x.shape)
+            i = flat.shape[0] // 2
+            v = flat[i]
+            bad = jnp.where(v == 0, jnp.asarray(self.magnitude, x.dtype), -v)
+            return flat.at[i].set(bad).reshape(x.shape)
         return jax.tree_util.tree_map(f, out)
 
     def wrap(self, fn: Callable) -> Callable:
         def bad(*a, **kw):
-            return self.corrupt(fn(*a, **kw))
+            clean = fn(*a, **kw)
+            out = self.corrupt(clean)
+            leaves = (jax.tree_util.tree_leaves(clean)
+                      + jax.tree_util.tree_leaves(out))
+            if not any(isinstance(x, jax.core.Tracer) for x in leaves):
+                # Eager call: assert the corruption actually corrupted.
+                same = all(
+                    np.array_equal(np.asarray(c), np.asarray(o))
+                    for c, o in zip(jax.tree_util.tree_leaves(clean),
+                                    jax.tree_util.tree_leaves(out)))
+                if same:
+                    raise InjectionNoOpError(
+                        f"{self.kind!r} injection left the output "
+                        "bit-identical to the clean run (zero-valued "
+                        "target?); the experiment would be vacuous")
+            return out
         return bad
 
 
@@ -124,21 +233,36 @@ def inject(stage: Stage, kind: str = "bitflip",
 
 # -------------------------------------------------------------- detectors
 class CanaryChecker:
-    """Per-stage HW-vs-SW canary compare (checksum or allclose)."""
+    """Per-stage HW-vs-SW canary compare (checksum or allclose).
+
+    With ``localize=True`` a failing sweep additionally diffs the two
+    lowerings lane-by-lane and, when the mismatch is confined to a strict
+    subset of output lanes, registers a ``LaneFault`` map
+    (``lanefault.set_map``) — unlocking the DEGRADED route family for
+    that stage instead of a binary drop to the SW oracle.
+    """
 
     def __init__(self, stages: Sequence[Stage], *, seed: int = 0,
-                 route_hw: str = HW):
+                 route_hw: str = HW, localize: bool = False):
         self.stages = list(stages)
         self.seed = seed
         self.route_hw = route_hw
+        self.auto_localize = localize
+
+    def _run_both(self, stage: Stage):
+        args = stage.canary_inputs(self.seed)
+        return (stage.run(*args, route=self.route_hw),
+                stage.run(*args, route=SW))
 
     def check_stage(self, stage: Stage) -> bool:
         """True = healthy."""
-        args = stage.canary_inputs(self.seed)
         try:
-            hw_out = stage.run(*args, route=self.route_hw)
-            sw_out = stage.run(*args, route=SW)
-        except Exception:
+            hw_out, sw_out = self._run_both(stage)
+        except EXPECTED_STAGE_ERRORS as e:
+            # Numeric/shape breakage on the HW path is itself the fault
+            # signal; anything unexpected re-raises (no fail-open except).
+            log.warning("canary: stage %r raised %s (%s); treating as a "
+                        "fault", stage.name, type(e).__name__, e)
             return False
         if stage.tol == 0.0:
             return bool(checksum_tree(hw_out) == checksum_tree(sw_out))
@@ -150,11 +274,68 @@ class CanaryChecker:
                                 b.astype(jnp.float32))) <= stage.tol)
         return ok
 
-    def sweep(self, state: FaultState, replica: int = 0) -> List[str]:
+    def localize(self, stage: Stage) -> Optional[lanefault.LaneFault]:
+        """Lane-level localization: diff HW vs SW on the canary inputs and
+        return a LaneFault when the mismatch is confined to a strict subset
+        of the output's lane (minor) axis; None when the fault is not
+        lane-shaped (whole-tile breakage -> binary SW quarantine)."""
+        try:
+            hw_out, sw_out = self._run_both(stage)
+        except EXPECTED_STAGE_ERRORS as e:
+            log.warning("canary: localize of stage %r raised %s (%s); "
+                        "not lane-shaped", stage.name, type(e).__name__, e)
+            return None
+        for a, b in zip(jax.tree_util.tree_leaves(hw_out),
+                        jax.tree_util.tree_leaves(sw_out)):
+            if (not hasattr(a, "dtype")
+                    or not jnp.issubdtype(a.dtype, jnp.inexact)
+                    or a.ndim < 1 or a.shape != b.shape):
+                continue
+            width = a.shape[-1]
+            if width < 2:
+                continue
+            af = np.asarray(a, np.float32).reshape(-1, width)
+            bf = np.asarray(b, np.float32).reshape(-1, width)
+            diff = np.abs(af - bf)
+            diff = np.where(np.isnan(diff), np.inf, diff)
+            per_lane = diff.max(axis=0)
+            bad = np.flatnonzero(per_lane > stage.tol)
+            if bad.size == 0 or bad.size >= width:
+                continue
+            lanes = tuple(int(i) for i in bad)
+            kind, value, gain = self._classify(af, bf, lanes)
+            return lanefault.LaneFault(kind=kind, lanes=lanes, width=width,
+                                       value=value, gain=gain)
+        return None
+
+    @staticmethod
+    def _classify(hw: np.ndarray, sw: np.ndarray, lanes: Tuple[int, ...]):
+        """Best-effort fault taxonomy from the observed lane values (only
+        lanes/width drive routing; the kind is diagnostic)."""
+        col = hw[:, lanes[0]]
+        ref = sw[:, lanes[0]]
+        if np.allclose(col, 0.0):
+            return lanefault.DROPPED_MAC, 1.5, 1.25
+        if col.size > 1 and np.allclose(col, col[0]):
+            return lanefault.STUCK, float(col[0]), 1.25
+        denom = np.where(np.abs(ref) > 1e-6, ref, 1.0)
+        ratio = np.where(np.abs(ref) > 1e-6, col / denom, np.nan)
+        g = float(np.nanmedian(ratio)) if np.isfinite(
+            np.nanmedian(ratio)) else 1.25
+        return lanefault.GAIN, 1.5, g
+
+    def sweep(self, state: FaultState, replica: int = 0,
+              step: int = 0) -> List[str]:
         found = []
         for s in self.stages:
             if not self.check_stage(s):
-                state.mark(s.name, replica, kind="canary")
+                kind = "canary"
+                if self.auto_localize:
+                    f = self.localize(s)
+                    if f is not None:
+                        lanefault.set_map(s.name, f, base=self.route_hw)
+                        kind = "canary_localized"
+                state.mark(s.name, replica, kind=kind, step=step)
                 found.append(s.name)
         return found
 

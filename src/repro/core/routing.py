@@ -34,10 +34,13 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Sequence, Tuple
 
-from repro.viscosity.lang import HW, INTERPRET, SW
+from repro.viscosity import lanefault
+from repro.viscosity.lang import (DEGRADED_TARGETS, HW, INTERPRET, SW)
 
-# Every target a plan may assign (the three Viscosity lowerings).
-TARGETS = (HW, SW, INTERPRET)
+# Every target a plan may assign: the three Viscosity lowerings plus the
+# DEGRADED route family (partial degradation; requires a localized lane map
+# — ``validate`` enforces that).
+TARGETS = (HW, SW, INTERPRET) + DEGRADED_TARGETS
 
 
 @dataclass(frozen=True)
@@ -133,7 +136,7 @@ class RoutingPlan:
         """Check the plan against the Viscosity registry and/or an explicit
         stage universe; returns self so call sites can chain."""
         known = set(stages) if stages is not None else None
-        for stage, _ in self.assignments:
+        for stage, target in self.assignments:
             if registry is not None and known is None and stage not in registry:
                 raise ValueError(
                     f"routing plan names unknown viscosity op {stage!r}; "
@@ -142,6 +145,12 @@ class RoutingPlan:
                 raise ValueError(
                     f"routing plan names unknown stage {stage!r}; "
                     f"known: {sorted(known)}")
+            if (target in DEGRADED_TARGETS
+                    and lanefault.fault_map(stage) is None):
+                raise ValueError(
+                    f"stage {stage!r} routed to {target!r} but no lane map "
+                    "is registered; detection must localize the fault first "
+                    "(lanefault.set_map / known_map)")
         return self
 
     # ----------------------------------------------------- lowering hooks
@@ -294,6 +303,10 @@ class FleetPlan:
     # strings (with hw_route=SW a faulted stage's target does not change,
     # but the silicon is still degraded and the capacity model must know).
     fault_counts: Tuple[int, ...] = ()
+    # Per-(device, stage) fault counts: the index into the degradation
+    # ladder (fault 1 -> remap, 2 -> reduced width, >=3 -> SW oracle).
+    # Sparse — only nonzero entries are stored.
+    stage_faults: Tuple[Tuple[Tuple[int, str], int], ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "plans", tuple(self.plans))
@@ -308,6 +321,12 @@ class FleetPlan:
         if len(self.fault_counts) != n:
             raise ValueError(f"fault_counts has {len(self.fault_counts)} "
                              f"entries for a {n}-device fleet")
+        sf = {tuple(k): int(v) for k, v in self.stage_faults if int(v) > 0}
+        object.__setattr__(self, "stage_faults", tuple(sorted(sf.items())))
+        for (d, _stage), _v in self.stage_faults:
+            if not 0 <= d < n:
+                raise ValueError(f"stage_faults device index {d} out of "
+                                 f"range for a {n}-device fleet")
         for p in self.plans:
             if not isinstance(p, RoutingPlan):
                 raise TypeError(f"FleetPlan entries must be RoutingPlans; "
@@ -366,6 +385,14 @@ class FleetPlan:
         into the VFA degradation curve (route-string independent)."""
         return self.fault_counts[device]
 
+    def stage_fault_count(self, device: int, stage: str) -> int:
+        """Faults accumulated on one (device, stage) — the degradation-
+        ladder rung index for that stage."""
+        for key, v in self.stage_faults:
+            if key == (device, stage):
+                return v
+        return 0
+
     def compile_key(self) -> Tuple[Tuple[Tuple[str, str], ...], ...]:
         """Multiset (sorted tuple) of serving plans: the Dispatcher cache
         key.  Two fleets with the same per-device routing multiset share
@@ -385,24 +412,41 @@ class FleetPlan:
                 + (self.fault_counts[device] + 1,)
                 + self.fault_counts[device + 1:])
 
+    def _bump_stage(self, device: int, stage: str
+                    ) -> Tuple[Tuple[Tuple[int, str], int], ...]:
+        sf = dict(self.stage_faults)
+        key = (device, stage)
+        sf[key] = sf.get(key, 0) + 1
+        return tuple(sorted(sf.items()))
+
     def with_stage_fault(self, device: int, stage: str,
                          fallback: str = SW) -> "FleetPlan":
         """One stage of ``device`` faults.  Paper Fig. 8 semantics: migrate
         the device's work to a free hot spare first; only with the pool
-        exhausted does the stage drop to its SW oracle in place."""
+        exhausted does the stage degrade in place.  In-place degradation
+        walks the ladder when detection has localized a lane map for the
+        stage (fault 1 -> DEGRADED remap, 2 -> reduced width, >=3 -> the
+        SW oracle); without a map it drops straight to ``fallback``."""
         if device not in self.serving():
             raise ValueError(f"device {device} is not serving; cannot fault "
                              f"stage {stage!r} there")
+        n = self.stage_fault_count(device, stage) + 1
+        if lanefault.fault_map(stage) is not None:
+            fb = lanefault.rung_for(n)
+        else:
+            fb = fallback
         pool, spare = self.pool.assign(device, exclude=self.quarantined)
         plans = self._set_plan(device,
-                               self.plans[device].with_fault(stage, fallback))
+                               self.plans[device].with_fault(stage, fb))
         counts = self._bump(device)
+        sfaults = self._bump_stage(device, stage)
         if spare is not None:
             return FleetPlan(plans=plans, pool=pool,
                              quarantined=self.quarantined + (device,),
-                             fault_counts=counts)
+                             fault_counts=counts, stage_faults=sfaults)
         return FleetPlan(plans=plans, pool=self.pool,
-                         quarantined=self.quarantined, fault_counts=counts)
+                         quarantined=self.quarantined, fault_counts=counts,
+                         stage_faults=sfaults)
 
     def with_device_fault(self, device: int, *,
                           exclude: Sequence[int] = ()) -> "FleetPlan":
@@ -418,7 +462,8 @@ class FleetPlan:
             device, exclude=tuple(self.quarantined) + tuple(exclude))
         return FleetPlan(plans=self.plans, pool=pool,
                          quarantined=self.quarantined + (device,),
-                         fault_counts=self._bump(device))
+                         fault_counts=self._bump(device),
+                         stage_faults=self.stage_faults)
 
     def with_host_fault(self, devices: Sequence[int]) -> "FleetPlan":
         """A whole host drops out: every serving device in ``devices``
@@ -442,7 +487,8 @@ class FleetPlan:
                              fp.pool.assignments)
             fp = FleetPlan(plans=fp.plans, pool=pool,
                            quarantined=fp.quarantined + lost_idle,
-                           fault_counts=fp.fault_counts)
+                           fault_counts=fp.fault_counts,
+                           stage_faults=fp.stage_faults)
         return fp
 
     def with_recovery(self, device: int, stage_names: Sequence[str], *,
@@ -457,10 +503,12 @@ class FleetPlan:
                                            default=self.plans[device].default))
         counts = (self.fault_counts[:device] + (0,)
                   + self.fault_counts[device + 1:])
+        sfaults = tuple((k, v) for k, v in self.stage_faults
+                        if k[0] != device)
         return FleetPlan(plans=plans, pool=self.pool.release(device),
                          quarantined=tuple(d for d in self.quarantined
                                            if d != device),
-                         fault_counts=counts)
+                         fault_counts=counts, stage_faults=sfaults)
 
     # --------------------------------------------------------- validation
     def validate(self, *, registry=None,

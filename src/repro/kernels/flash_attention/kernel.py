@@ -25,12 +25,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.viscosity.lanefault import apply_fault
+
 NEG_INF = -1e30
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                  scale: float, causal: bool, window: int, softcap: float,
-                 bq: int, bk: int, nk: int, kv_len: int):
+                 bq: int, bk: int, nk: int, kv_len: int, lane_fault=None):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     q_start = qi * bq
@@ -82,16 +84,24 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     @pl.when(ki == nk - 1)
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        # Value-level fault injection (lanefault): masked corruption of the
+        # normalized output tile's head_dim lanes, only present in the
+        # trace when a fault is registered.
+        o_ref[0, 0] = apply_fault(acc_scr[...] / l,
+                                  lane_fault).astype(o_ref.dtype)
 
 
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          softcap: float = 0.0, scale: float = 0.0,
                          kv_len: int = 0, bq: int = 128, bk: int = 128,
-                         interpret: bool = False):
-    """q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D). Sq % bq == Skv % bk == 0."""
+                         interpret: bool = False, lane_fault=None):
+    """q: (B, H, Sq, D); k: (B, Hkv, Skv, D); v: (B, Hkv, Skv, Dv).
+    Sq % bq == Skv % bk == 0.  The output head_dim is ``v.shape[3]`` —
+    normally D, narrower under DEGRADED_REDUCED (reduced-width execution
+    slices v to the surviving lanes)."""
     B, H, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[3]
     assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
     assert H % Hkv == 0
     nq, nk = Sq // bq, Skv // bk
@@ -100,7 +110,8 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
 
     kernel = functools.partial(
         _attn_kernel, scale=sc, causal=causal, window=window,
-        softcap=softcap, bq=bq, bk=bk, nk=nk, kv_len=kv_len)
+        softcap=softcap, bq=bq, bk=bk, nk=nk, kv_len=kv_len,
+        lane_fault=lane_fault)
 
     grid = (B, H, nq, nk)
     return pl.pallas_call(
@@ -110,15 +121,15 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
             pl.BlockSpec((1, 1, bk, D),
                          lambda b, h, qi, ki, Hkv=Hkv, H=H: (b, h * Hkv // H, ki, 0)),
-            pl.BlockSpec((1, 1, bk, D),
+            pl.BlockSpec((1, 1, bk, Dv),
                          lambda b, h, qi, ki, Hkv=Hkv, H=H: (b, h * Hkv // H, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dv), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v)

@@ -16,6 +16,7 @@ from repro import viscosity
 from repro.kernels import tuning
 from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.viscosity import lanefault
 
 
 def _pad_to(x, m, axis):
@@ -30,12 +31,16 @@ def _pad_to(x, m, axis):
 def _kernel_path(q, k, v, *, causal=True, window=0, softcap=0.0, scale=0.0,
                  q_offset=None, kv_len=None, kv_chunk=0, bq=None, bk=None,
                  interpret=False):
+    fault = lanefault.injection("flash_attention")
     if q_offset is not None or kv_len is not None:
         # decode-style calls carry dynamic positions; the kernel targets
         # train/prefill. Fall back to the software lowering (still correct).
-        return _ref.attention_chunked(q, k, v, causal=causal, window=window,
-                                      softcap=softcap, scale=scale,
-                                      q_offset=q_offset, kv_len=kv_len)
+        # This branch IS the HW lowering for decode, so an active lane
+        # fault corrupts it too (wrapper-level: same masked-where).
+        out = _ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                     softcap=softcap, scale=scale,
+                                     q_offset=q_offset, kv_len=kv_len)
+        return fault.corrupt_tree(out) if fault is not None else out
     B, Sq, H, D = q.shape
     Skv = k.shape[1]
     # Tuned score-tile (bq, bk) for this (shape, dtype, active routing
@@ -58,8 +63,16 @@ def _kernel_path(q, k, v, *, causal=True, window=0, softcap=0.0, scale=0.0,
     vt, _ = _pad_to(vt, bk, 2)
     out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
                                softcap=softcap, scale=scale, kv_len=real_kv,
-                               bq=bq, bk=bk, interpret=interpret)
+                               bq=bq, bk=bk, interpret=interpret,
+                               lane_fault=fault)
     return out[:, :, :Sq, :].transpose(0, 2, 1, 3)
+
+
+def _lane_slicer(args, kw, keep):
+    # attention output lane j depends only on v[..., j] (softmax weights
+    # come from q@k): slicing v's head_dim is exact reduced-width execution.
+    q, k, v = args
+    return (q, k, v[..., jnp.asarray(keep, jnp.int32)]), kw
 
 
 def _sw_path(q, k, v, *, kv_chunk=None, bq=128, bk=128, interpret=False,
@@ -82,6 +95,7 @@ ATTENTION = viscosity.defop(
     tol=2e-2,
     flops=lambda q, k, *a, **kw: _ref.attention_flops(
         q.shape[0], q.shape[1], k.shape[1], q.shape[2], q.shape[3]),
+    lane_slicer=_lane_slicer,
 )
 
 

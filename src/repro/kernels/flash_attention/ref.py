@@ -107,6 +107,7 @@ def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
     """
     B, Sq, H, D = q.shape
     Skv = k.shape[1]
+    Dv = v.shape[-1]   # may be < D under reduced-width (surviving lanes)
     C = min(kv_chunk, Skv)
     if Skv % C:  # pad KV to a chunk multiple; padding masked via kv_len
         pad = C - Skv % C
@@ -121,7 +122,7 @@ def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
     q_pos = _positions(B, Sq, q_offset)
 
     kc = _repeat_kv(k, H).reshape(B, nC, C, H, D).transpose(1, 0, 2, 3, 4)
-    vc = _repeat_kv(v, H).reshape(B, nC, C, H, D).transpose(1, 0, 2, 3, 4)
+    vc = _repeat_kv(v, H).reshape(B, nC, C, H, Dv).transpose(1, 0, 2, 3, 4)
 
     def body(carry, xs):
         m_prev, l_prev, acc = carry
@@ -145,7 +146,7 @@ def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
 
     m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, H, Sq), jnp.float32)
-    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
     ci = jnp.arange(nC, dtype=jnp.int32)
     # checkpoint the chunk body: backward residuals are then one chunk's
     # (m, l, acc) carry instead of every chunk's (B,H,Sq,C) score tensors

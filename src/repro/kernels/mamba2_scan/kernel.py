@@ -22,9 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.viscosity.lanefault import apply_fault
+
 
 def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref, state_scr, *,
-                L: int, N: int, P: int):
+                L: int, N: int, P: int, lane_fault=None):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -49,7 +51,9 @@ def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref, state_scr, *,
     y_state = jax.lax.dot_general(c, state, (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
     y = y_intra + y_state * jnp.exp(cum)[:, None]
-    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # Value-level fault injection (lanefault): masked corruption of the
+    # chunk's head-channel lane axis; absent from the trace when healthy.
+    y_ref[0, :, 0, :] = apply_fault(y, lane_fault).astype(y_ref.dtype)
 
     tot = cum[L - 1]
     bscale = b * jnp.exp(tot - cum)[:, None]           # (L, N)
@@ -59,7 +63,7 @@ def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref, state_scr, *,
 
 
 def ssd_chunked_pallas(x, dt, A, B_, C, *, chunk: int = 128,
-                       interpret: bool = False):
+                       interpret: bool = False, lane_fault=None):
     """x (B,S,H,P), dt (B,S,H), A (H,), B_/C (B,S,N) -> y (B,S,H,P).
 
     S must be a multiple of ``chunk`` (ops wrapper pads).  Final state is
@@ -75,7 +79,8 @@ def ssd_chunked_pallas(x, dt, A, B_, C, *, chunk: int = 128,
     xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
     da = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]
 
-    kernel = functools.partial(_ssd_kernel, L=L, N=N, P=P)
+    kernel = functools.partial(_ssd_kernel, L=L, N=N, P=P,
+                               lane_fault=lane_fault)
     grid = (Bt, H, nc)
     y = pl.pallas_call(
         kernel,

@@ -9,6 +9,7 @@ from repro import viscosity
 from repro.kernels import tuning
 from repro.kernels.mamba2_scan import ref as _ref
 from repro.kernels.mamba2_scan.kernel import ssd_chunked_pallas
+from repro.viscosity import lanefault
 
 
 def _tuned_chunk(kind, x, B_, default):
@@ -35,8 +36,16 @@ def _hw(x, dt, A, B_, C, *, chunk=None, interpret: bool = False):
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
         C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
-    y = ssd_chunked_pallas(x, dt, A, B_, C, chunk=L, interpret=interpret)
+    y = ssd_chunked_pallas(x, dt, A, B_, C, chunk=L, interpret=interpret,
+                           lane_fault=lanefault.injection("mamba2_ssd"))
     return y[:, :S]
+
+
+def _lane_slicer(args, kw, keep):
+    # y's head-channel lane j depends only on x[..., j] (the SSD mixes over
+    # sequence/state, never across P): slicing x is exact reduced width.
+    x, dt, A, B_, C = args
+    return (x[..., jnp.asarray(keep, jnp.int32)], dt, A, B_, C), kw
 
 
 SSD = viscosity.defop(
@@ -48,6 +57,7 @@ SSD = viscosity.defop(
     tol=2e-2,
     flops=lambda x, dt, A, B_, C, **kw: _ref.ssd_flops(
         x.shape[0], x.shape[1], x.shape[2], x.shape[3], B_.shape[-1]),
+    lane_slicer=_lane_slicer,
 )
 
 

@@ -21,9 +21,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.viscosity.lanefault import apply_fault
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_scr, *,
-                L: int, K: int, V: int):
+                L: int, K: int, V: int, lane_fault=None):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -53,7 +55,9 @@ def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_scr, *,
     o += jax.lax.dot_general(qexp, state, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     o += bonus * v
-    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+    # Value-level fault injection (lanefault): masked corruption of the
+    # chunk's value-lane axis; absent from the trace when healthy.
+    o_ref[0, :, 0, :] = apply_fault(o, lane_fault).astype(o_ref.dtype)
 
     tot = la[L - 1]                                # (K,)
     kscale = k * jnp.exp(tot[None, :] - la)
@@ -63,7 +67,7 @@ def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_scr, *,
 
 
 def wkv6_chunked_pallas(r, k, v, lw, u, *, chunk: int = 16,
-                        interpret: bool = False):
+                        interpret: bool = False, lane_fault=None):
     """r/k/lw (B,S,H,K); v (B,S,H,V); u (H,K). S % chunk == 0."""
     B, S, H, K = r.shape
     V = v.shape[-1]
@@ -71,7 +75,8 @@ def wkv6_chunked_pallas(r, k, v, lw, u, *, chunk: int = 16,
     assert S % L == 0, (S, L)
     nc = S // L
 
-    kernel = functools.partial(_wkv_kernel, L=L, K=K, V=V)
+    kernel = functools.partial(_wkv_kernel, L=L, K=K, V=V,
+                               lane_fault=lane_fault)
     grid = (B, H, nc)
     spec_k = pl.BlockSpec((1, L, 1, K), lambda b, h, ci: (b, ci, h, 0))
     spec_v = pl.BlockSpec((1, L, 1, V), lambda b, h, ci: (b, ci, h, 0))

@@ -9,6 +9,7 @@ from repro import viscosity
 from repro.kernels import tuning
 from repro.kernels.rwkv6_scan import ref as _ref
 from repro.kernels.rwkv6_scan.kernel import wkv6_chunked_pallas
+from repro.viscosity import lanefault
 
 
 def _tuned_chunk(kind, r, v, default):
@@ -33,8 +34,16 @@ def _hw(r, k, v, lw, u, *, chunk=None, interpret: bool = False):
         pad = L - S % L
         pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
         r, k, v, lw = (jnp.pad(a, pad4) for a in (r, k, v, lw))
-    o = wkv6_chunked_pallas(r, k, v, lw, u, chunk=L, interpret=interpret)
+    o = wkv6_chunked_pallas(r, k, v, lw, u, chunk=L, interpret=interpret,
+                            lane_fault=lanefault.injection("rwkv6_wkv"))
     return o[:, :S]
+
+
+def _lane_slicer(args, kw, keep):
+    # o's value lane j depends only on v[..., j] (scores/state-decay mix
+    # over K and sequence, never across V): slicing v is exact.
+    r, k, v, lw, u = args
+    return (r, k, v[..., jnp.asarray(keep, jnp.int32)], lw, u), kw
 
 
 WKV6 = viscosity.defop(
@@ -46,6 +55,7 @@ WKV6 = viscosity.defop(
     tol=2e-2,
     flops=lambda r, k, v, *a, **kw: _ref.wkv6_flops(
         r.shape[0], r.shape[1], r.shape[2], r.shape[3], v.shape[-1]),
+    lane_slicer=_lane_slicer,
 )
 
 

@@ -26,10 +26,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.swiglu.ref import gate
+from repro.viscosity.lanefault import apply_fault
 
 
 def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_scr, *,
-                   nf: int, bs: int, act: str):
+                   nf: int, bs: int, act: str, lane_fault=None):
     fi = pl.program_id(1)
 
     @pl.when(fi == 0)
@@ -56,15 +57,24 @@ def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_scr, *,
 
     @pl.when(fi == nf - 1)
     def _flush():
-        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+        # Value-level fault injection (lanefault): a static LaneFault
+        # corrupts the output tile's lane axis at the single flush point —
+        # the masked-where only exists in the trace when a fault is
+        # registered, so healthy builds are byte-identical.
+        o_ref[...] = apply_fault(acc_scr[...],
+                                 lane_fault).astype(o_ref.dtype)
 
 
 def swiglu_pallas(x, w1, w3, w2, *, act: str = "silu", bm: int = 128,
-                  bf: int = 512, bs: int = 128, interpret: bool = False):
-    """x (M, D); w1/w3 (D, F); w2 (F, D). M % bm == 0, F % bf == 0,
-    bf % bs == 0 (after clamping each knob to its dim)."""
+                  bf: int = 512, bs: int = 128, interpret: bool = False,
+                  lane_fault=None):
+    """x (M, D); w1/w3 (D, F); w2 (F, Do). M % bm == 0, F % bf == 0,
+    bf % bs == 0 (after clamping each knob to its dim).  The output width
+    is ``w2.shape[1]`` — normally D, narrower under DEGRADED_REDUCED
+    (reduced-width execution slices w2 to the surviving lanes)."""
     M, D = x.shape
     F = w1.shape[1]
+    Do = w2.shape[1]
     bm = min(bm, M)
     bf = min(bf, F)
     bs = min(bs, bf)
@@ -72,16 +82,17 @@ def swiglu_pallas(x, w1, w3, w2, *, act: str = "silu", bm: int = 128,
     assert bf % bs == 0, (bf, bs)
     grid = (M // bm, F // bf)
     return pl.pallas_call(
-        functools.partial(_swiglu_kernel, nf=F // bf, bs=bs, act=act),
+        functools.partial(_swiglu_kernel, nf=F // bf, bs=bs, act=act,
+                          lane_fault=lane_fault),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, D), lambda mi, fi: (mi, 0)),
             pl.BlockSpec((D, bf), lambda mi, fi: (0, fi)),
             pl.BlockSpec((D, bf), lambda mi, fi: (0, fi)),
-            pl.BlockSpec((bf, D), lambda mi, fi: (fi, 0)),
+            pl.BlockSpec((bf, Do), lambda mi, fi: (fi, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, D), lambda mi, fi: (mi, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, D), jnp.float32)],
+        out_specs=pl.BlockSpec((bm, Do), lambda mi, fi: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, Do), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, Do), jnp.float32)],
         interpret=interpret,
     )(x, w1, w3, w2)

@@ -3,10 +3,13 @@ from __future__ import annotations
 
 import functools
 
+import jax.numpy as jnp
+
 from repro import viscosity
 from repro.kernels import tuning
 from repro.kernels.swiglu import ref as _ref
 from repro.kernels.swiglu.kernel import swiglu_pallas
+from repro.viscosity import lanefault
 
 
 def _hw(x, w1, w3, w2, *, act: str = "silu", interpret: bool = False,
@@ -30,7 +33,15 @@ def _hw(x, w1, w3, w2, *, act: str = "silu", interpret: bool = False,
     if bs is None:
         bs = cfg.get("bs") or (128 if min(bf, F) % 128 == 0 else bf)
     return swiglu_pallas(x, w1, w3, w2, act=act, bm=bm, bf=bf, bs=bs,
-                         interpret=interpret)
+                         interpret=interpret,
+                         lane_fault=lanefault.injection("swiglu_mlp"))
+
+
+def _lane_slicer(args, kw, keep):
+    # Output lane j depends only on w2[:, j]: slicing w2's columns to the
+    # surviving lanes is exact reduced-width execution.
+    x, w1, w3, w2 = args
+    return (x, w1, w3, w2[:, jnp.asarray(keep, jnp.int32)]), kw
 
 
 SWIGLU = viscosity.defop(
@@ -42,6 +53,7 @@ SWIGLU = viscosity.defop(
     tol=2e-2,
     flops=lambda x, w1, *a, **kw: _ref.swiglu_flops(
         x.shape[0], x.shape[1], w1.shape[1]),
+    lane_slicer=_lane_slicer,
 )
 
 

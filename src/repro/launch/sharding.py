@@ -11,11 +11,14 @@ EXPERIMENTS.md §Perf mostly edit this table, not the model code.
 from __future__ import annotations
 
 import contextlib
+import logging
 import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
 
 Axis = Union[None, str, Tuple[str, ...]]
 
@@ -82,8 +85,13 @@ def constrain(x, *names: Optional[str]):
         return x
     try:
         return jax.lax.with_sharding_constraint(x, resolve(*names))
-    except Exception:
-        return x  # shape/axis mismatch inside exotic paths: stay unsharded
+    except (ValueError, TypeError) as e:
+        # Shape/axis mismatch inside exotic paths: stay unsharded.  Only
+        # the expected spec errors are swallowed (and logged) — anything
+        # else is a real bug and propagates.
+        log.debug("constrain(%s): %s (%s); leaving unsharded",
+                  names, type(e).__name__, e)
+        return x
 
 
 def named_sharding(mesh: Mesh, *names: Optional[str]) -> NamedSharding:

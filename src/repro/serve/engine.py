@@ -64,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.datacenter import DegradationModel
 from repro.core.fault import FaultState
 from repro.core.oobleck import Dispatcher
 from repro.core.routing import FleetPlan, RoutingPlan
@@ -71,7 +72,7 @@ from repro.launch.distributed import EventChannel, HostTopology, \
     fleet_fingerprint
 from repro.models import build_model
 from repro.train.runner import model_stage_names
-from repro.viscosity import REGISTRY, SW
+from repro.viscosity import REGISTRY, SW, lanefault
 
 # Failover modes (paper §III: queue reconfiguration vs hot-spare residency).
 RECOMPILE = "recompile"
@@ -268,11 +269,16 @@ class ServeEngine(_SlotPool):
     # ------------------------------------------------------------- plans
     def plan(self) -> RoutingPlan:
         """RoutingPlan for the current fault state (the one IR every layer
-        shares): healthy stages take the deployment target, quarantined
-        stages their SW fallback."""
-        return RoutingPlan.from_signature(
+        shares): healthy stages take the deployment target; quarantined
+        stages walk the degradation ladder when detection has localized a
+        lane map (fault 1 -> remap, 2 -> reduced width, then SW), or drop
+        straight to the SW fallback without one."""
+        base = RoutingPlan.from_signature(
             self.fault_state.signature(self.stage_names),
-            healthy=self.scfg.hw_route).validate(registry=REGISTRY)
+            healthy=self.scfg.hw_route)
+        return lanefault.degraded_plan(
+            base, self.fault_state.counts(self.stage_names)
+        ).validate(registry=REGISTRY)
 
     def _decode_key(self) -> RoutingPlan:
         if self.scfg.failover == RESIDENT:
@@ -482,14 +488,26 @@ class FleetConfig:
     with ``topology.host_id`` set, this process executes only its own
     device block and shadows the rest; ``host_id=None`` keeps everything
     local while still enabling host-indexed events (single-process
-    emulation, the benches' ``--hosts`` mode)."""
+    emulation, the benches' ``--hosts`` mode).
+
+    ``model`` upgrades the scalar curve to a ``DegradationModel``: a
+    device whose plan routes stages through the DEGRADED family is
+    charged those stages' per-rung partial factors instead of full curve
+    steps (pass the device's RoutingPlan to ``capacity_for``)."""
 
     n_devices: int = 2
     n_spares: int = 0
     degradation: Optional[Sequence[float]] = None
     topology: Optional[HostTopology] = None
+    model: Optional[DegradationModel] = None
 
-    def capacity_for(self, n_faults: int, max_slots: int) -> int:
+    def capacity_for(self, n_faults: int, max_slots: int,
+                     plan: Optional[RoutingPlan] = None) -> int:
+        if self.model is not None:
+            rungs = (DegradationModel.rungs_of(plan)
+                     if plan is not None else ())
+            return max(0, int(self.model.slot_cap(max_slots, n_faults,
+                                                  rungs)))
         if self.degradation is None:
             return max_slots
         deg = list(self.degradation)
@@ -640,7 +658,8 @@ class FleetServeEngine:
         for d, w in enumerate(self.workers):
             if d in serving:
                 w.capacity = self.fcfg.capacity_for(
-                    self.fleet.n_faults(d), self.scfg.max_slots)
+                    self.fleet.n_faults(d), self.scfg.max_slots,
+                    plan=self.fleet.plans[d])
             else:
                 w.capacity = 0
 

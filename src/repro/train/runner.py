@@ -37,7 +37,7 @@ from repro.data.pipeline import SyntheticLM
 from repro.launch.distributed import FleetEvent, HostTopology, HostView
 from repro.launch.sharding import shard_bounds
 from repro.models import build_model
-from repro.viscosity import INTERPRET, REGISTRY, SW
+from repro.viscosity import INTERPRET, REGISTRY, SW, lanefault
 
 PyTree = Any
 
@@ -93,6 +93,7 @@ class TrainConfig:
     log_every: int = 10
     ckpt_every: int = 50
     canary_every: int = 0          # 0 = disabled
+    canary_localize: bool = False  # lane-localize canary faults (DEGRADED)
     ckpt_dir: Optional[str] = None
     compression: bool = False      # int8 EF gradient compression
     hw_route: str = SW             # production: HW; CPU tests: SW/INTERPRET
@@ -146,10 +147,14 @@ class TrainRunner:
 
     def plan(self) -> RoutingPlan:
         """The RoutingPlan for the current fault state: healthy stages take
-        the deployment's optimized target, quarantined ones fall back to
-        the SW oracle.  Hashable — it is the Dispatcher cache key."""
-        return RoutingPlan.from_signature(
-            self.signature(), healthy=self.tcfg.hw_route).validate(
+        the deployment's optimized target; quarantined ones walk the
+        degradation ladder when a lane map is localized (remap -> reduced
+        width -> SW), or drop straight to the SW oracle without one.
+        Hashable — it is the Dispatcher cache key."""
+        base = RoutingPlan.from_signature(
+            self.signature(), healthy=self.tcfg.hw_route)
+        return lanefault.degraded_plan(
+            base, self.fault_state.counts(self.stage_names)).validate(
                 registry=REGISTRY)
 
     def inject_fault(self, stage: str, kind: str = "injected"):
@@ -178,9 +183,10 @@ class TrainRunner:
             if not StepGuard.ok({"loss": metrics["loss"],
                                  "grad_norm": metrics["grad_norm"]}):
                 self.guard_trips += 1
-                self.fault_state.log.append(
-                    {"stage": "<step>", "replica": 0, "kind": "nan_guard",
-                     "t": time.time()})
+                # Logical (step, origin, seq) stamp — never wall clock:
+                # the fault log is a deterministic function of the run.
+                self.fault_state.note("<step>", kind="nan_guard",
+                                      step=step_i)
                 if self.ckpt and last_good >= 0 and self.ckpt.steps():
                     s = self.ckpt.latest_step()
                     self.ckpt.wait()
@@ -209,8 +215,9 @@ class TrainRunner:
                 on_step(step_i, row)
             if tcfg.canary_every and (step_i + 1) % tcfg.canary_every == 0:
                 chk = CanaryChecker(canary_stages(self.cfg),
-                                    route_hw=tcfg.hw_route)
-                chk.sweep(self.fault_state)
+                                    route_hw=tcfg.hw_route,
+                                    localize=tcfg.canary_localize)
+                chk.sweep(self.fault_state, step=step_i)
             if self.ckpt and (step_i + 1) % tcfg.ckpt_every == 0:
                 self.ckpt.save_async(step_i + 1,
                                      {"params": params, "opt": opt_state},

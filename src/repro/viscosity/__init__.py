@@ -1,5 +1,6 @@
-from repro.viscosity.lang import (HW, INTERPRET, REGISTRY, SW, OpSpec, defop,
-                                  finite_valid)
+from repro.viscosity.lang import (DEGRADED_REDUCED, DEGRADED_REMAP,
+                                  DEGRADED_TARGETS, HW, INTERPRET, REGISTRY,
+                                  SW, OpSpec, defop, finite_valid)
 
-__all__ = ["HW", "INTERPRET", "REGISTRY", "SW", "OpSpec", "defop",
-           "finite_valid"]
+__all__ = ["DEGRADED_REDUCED", "DEGRADED_REMAP", "DEGRADED_TARGETS", "HW",
+           "INTERPRET", "REGISTRY", "SW", "OpSpec", "defop", "finite_valid"]

@@ -1,0 +1,292 @@
+"""Value-level lane faults and the DEGRADED route family (paper §III-A).
+
+The binary routing story (healthy Pallas kernel vs full SW oracle) treats a
+faulted sub-accelerator as all-or-nothing.  The related work does better:
+permanent-fault systolic arrays remap around dead MAC columns (arxiv
+1802.04657) and RedMulE-FT reconfigures redundancy on demand (arxiv
+2504.14399).  This module is the TPU-native equivalent:
+
+  * ``LaneFault`` describes a *value-level* defect on the lane (minor) axis
+    of a kernel's output tile: a stuck-at lane, a dropped-MAC column
+    (accumulates nothing -> 0), or a gain-skewed sublane.  It is
+    deterministic and shape-aware — it only touches arrays whose lane axis
+    matches its declared ``width``.
+  * An **injection registry** (``inject``/``injection``): each kernel
+    family's ``ops.py`` consults it on the HW path and threads the fault
+    into the Pallas kernel body as a masked corruption of the output tile.
+    With nothing registered the kernel body is untouched at trace time, so
+    healthy paths compile identically.
+  * A **lane-map registry** (``known_map``/``fault_map``): what detection
+    has *localized*.  Routing consults it — ``FleetPlan.with_stage_fault``
+    prefers a DEGRADED target over the SW oracle when a lane map is known,
+    and ``RoutingPlan.validate`` rejects a DEGRADED target with no map.
+  * The **DEGRADED lowerings** (``lower_degraded``), registered per stage
+    through ``OpSpec.lower``:
+
+      - ``DEGRADED_REMAP``: run the (corrupted) HW path at full width,
+        recompute the dead lanes' outputs via the SW oracle and scatter
+        them in — corruption confined to the mapped lanes is healed
+        exactly, so completions stay bit-identical to an uninjected run
+        under the same plan.
+      - ``DEGRADED_REDUCED``: shrink the tile to the surviving lanes —
+        ops that declare a ``lane_slicer`` run their kernel on a
+        lane-sliced operand window (the Pallas kernels derive their
+        output width from the sliced operand), dead lanes come from the
+        oracle.  Ops without a slicer fall back to remap semantics
+        (functionally identical; the capacity model still charges the
+        reduced-width factor).
+
+The injection and map registries are process-global and keyed by stage
+name — they model *this host's* silicon.  Both are consulted at trace
+time: a plan traced under injection stays corrupted (like the silicon it
+emulates), and a degraded plan is one more Dispatcher compile key, not a
+new mechanism.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import operator
+from dataclasses import dataclass
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.viscosity.lang import (DEGRADED_REDUCED, DEGRADED_REMAP,
+                                  DEGRADED_TARGETS, HW, INTERPRET, SW)
+
+# Fault kinds (the value-level defects a LaneFault can describe).
+STUCK = "stuck"                # lane pinned to ``value``
+DROPPED_MAC = "dropped_mac"    # dead MAC column: accumulates nothing -> 0
+GAIN = "gain"                  # lane scaled by ``gain``
+KINDS = (STUCK, DROPPED_MAC, GAIN)
+
+# The degradation ladder: fault k on a lane-mapped stage lands on rung k.
+RUNGS = (DEGRADED_REMAP, DEGRADED_REDUCED, SW)
+
+
+@dataclass(frozen=True)
+class LaneFault:
+    """One value-level defect on the lane (minor) axis of a stage's output.
+
+    ``width`` is the lane-axis width the map refers to; ``apply`` touches
+    only arrays whose minor axis matches it, so the same descriptor threads
+    safely through wrappers that see tensors of several shapes.  ``value``
+    defaults to a *nonzero* stuck-at level: a stuck-at-zero lane over a
+    zero activation is undetectable (the FaultInjector no-op bug class).
+    """
+
+    kind: str
+    lanes: Tuple[int, ...]
+    width: int
+    value: float = 1.5
+    gain: float = 1.25
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown lane-fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.width < 2:
+            raise ValueError(f"lane width must be >= 2, got {self.width}")
+        lanes = tuple(sorted(set(int(x) for x in self.lanes)))
+        object.__setattr__(self, "lanes", lanes)
+        if not lanes:
+            raise ValueError("a LaneFault must name at least one lane")
+        if lanes[0] < 0 or lanes[-1] >= self.width:
+            raise ValueError(f"lanes {lanes} out of range for width "
+                             f"{self.width}")
+        if len(lanes) >= self.width:
+            raise ValueError(f"all {self.width} lanes dead: that is a device "
+                             "fault, not a lane fault")
+
+    # ------------------------------------------------------------ queries
+    def survivors(self) -> Tuple[int, ...]:
+        dead = set(self.lanes)
+        return tuple(i for i in range(self.width) if i not in dead)
+
+    def lane_mask(self, x) -> jax.Array:
+        """Boolean mask over ``x`` (True on faulted lanes of the minor
+        axis).  Uses ``broadcasted_iota`` so it lowers inside Pallas
+        kernel bodies too."""
+        idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+        return functools.reduce(operator.or_,
+                                [idx == lane for lane in self.lanes])
+
+    # ----------------------------------------------------------- corrupt
+    def apply(self, x):
+        """Masked corruption of ``x``'s minor axis; identity for arrays
+        whose minor axis is not this fault's ``width`` (shape-aware)."""
+        if not hasattr(x, "dtype") or not jnp.issubdtype(x.dtype,
+                                                         jnp.inexact):
+            return x
+        if x.ndim < 1 or x.shape[-1] != self.width:
+            return x
+        mask = self.lane_mask(x)
+        if self.kind == STUCK:
+            return jnp.where(mask, jnp.asarray(self.value, x.dtype), x)
+        if self.kind == DROPPED_MAC:
+            return jnp.where(mask, jnp.zeros((), x.dtype), x)
+        return jnp.where(mask, x * jnp.asarray(self.gain, x.dtype), x)
+
+    def corrupt_tree(self, out):
+        return jax.tree_util.tree_map(self.apply, out)
+
+
+# ---------------------------------------------------------------- registry
+# Two separate tables, because detection and physics are separate things:
+#   _INJECT: the defect *active in the silicon* — kernels corrupt with it.
+#   _MAPS:   the defect *detection has localized* — routing degrades with
+#            it (fault, base-target the degraded lowering wraps).
+_INJECT: Dict[str, LaneFault] = {}
+_MAPS: Dict[str, Tuple[LaneFault, str]] = {}
+
+
+def set_injection(stage: str, fault: LaneFault):
+    _INJECT[stage] = fault
+
+
+def clear_injection(stage: str):
+    _INJECT.pop(stage, None)
+
+
+def injection(stage: str) -> Optional[LaneFault]:
+    """The fault actively corrupting ``stage``'s HW path (None = healthy).
+    Consulted by the kernel wrappers at trace time."""
+    return _INJECT.get(stage)
+
+
+@contextlib.contextmanager
+def inject(stage: str, fault: LaneFault):
+    """Corrupt ``stage``'s HW path for the duration of the context.
+    Trace-time: executables compiled inside stay corrupted (they model the
+    silicon), executables compiled outside stay clean."""
+    set_injection(stage, fault)
+    try:
+        yield fault
+    finally:
+        clear_injection(stage)
+
+
+def set_map(stage: str, fault: LaneFault, base: str = HW):
+    """Record a localized lane map for ``stage``.  ``base`` is the
+    optimized target the DEGRADED lowerings wrap (HW on TPU, INTERPRET or
+    SW on CPU hosts)."""
+    if base not in (HW, SW, INTERPRET):
+        raise ValueError(f"degraded base target must be one of "
+                         f"{(HW, SW, INTERPRET)}, got {base!r}")
+    _MAPS[stage] = (fault, base)
+
+
+def clear_map(stage: str):
+    _MAPS.pop(stage, None)
+
+
+def fault_map(stage: str) -> Optional[LaneFault]:
+    rec = _MAPS.get(stage)
+    return rec[0] if rec else None
+
+
+def map_base(stage: str) -> Optional[str]:
+    rec = _MAPS.get(stage)
+    return rec[1] if rec else None
+
+
+@contextlib.contextmanager
+def known_map(stage: str, fault: LaneFault, base: str = HW):
+    set_map(stage, fault, base)
+    try:
+        yield fault
+    finally:
+        clear_map(stage)
+
+
+def reset():
+    """Drop every registered injection and lane map (test hygiene)."""
+    _INJECT.clear()
+    _MAPS.clear()
+
+
+# ---------------------------------------------------------------- kernels
+def apply_fault(x, fault: Optional[LaneFault]):
+    """Kernel-side hook: masked corruption of one output tile.  Pure jnp
+    (``broadcasted_iota`` + ``where``), so it lowers inside Pallas kernel
+    bodies; a None fault is the healthy path — no ops are emitted and the
+    compiled artifact is byte-identical to a build without injection."""
+    if fault is None:
+        return x
+    return fault.apply(x)
+
+
+# ----------------------------------------------------------------- ladder
+def rung_for(n_faults: int) -> str:
+    """Target for the ``n_faults``-th fault on a lane-mapped stage:
+    remap -> reduced-width -> full SW oracle (and it stays there)."""
+    if n_faults < 1:
+        raise ValueError(f"rung_for needs >= 1 fault, got {n_faults}")
+    return RUNGS[min(n_faults - 1, len(RUNGS) - 1)]
+
+
+def degraded_plan(plan, counts: Mapping[str, int]):
+    """Ladder a RoutingPlan by per-stage fault counts: stages with a known
+    lane map take the count's rung; unmapped stages keep whatever binary
+    fallback the plan already assigned them."""
+    for stage, n in sorted(counts.items()):
+        if n > 0 and fault_map(stage) is not None:
+            plan = plan.with_target(stage, rung_for(n))
+    return plan
+
+
+# -------------------------------------------------------------- lowerings
+def lower_degraded(spec, target: str) -> Callable:
+    """Lower one OpSpec to a DEGRADED target using its registered lane map.
+
+    remap:   out = scatter(oracle -> dead lanes, base HW path elsewhere)
+    reduced: run the kernel on the surviving-lane operand window (via the
+             op's ``lane_slicer``) and scatter into the oracle's dead-lane
+             values; no slicer -> remap semantics.
+    """
+    if target not in DEGRADED_TARGETS:
+        raise ValueError(f"{target!r} is not a DEGRADED target")
+    rec = _MAPS.get(spec.name)
+    if rec is None:
+        raise ValueError(
+            f"stage {spec.name!r} routed to {target!r} but no lane map is "
+            "registered; detection must localize the fault first "
+            "(lanefault.set_map / known_map)")
+    fault, base = rec
+    hw_fn = spec.lower(base)
+    ref_fn = spec.ref
+
+    def _scatter_full(hw_out, ref_out):
+        def leaf(h, r):
+            if (hasattr(h, "dtype") and jnp.issubdtype(h.dtype, jnp.inexact)
+                    and h.ndim >= 1 and h.shape[-1] == fault.width):
+                return jnp.where(fault.lane_mask(h), r.astype(h.dtype), h)
+            return h
+        return jax.tree_util.tree_map(leaf, hw_out, ref_out)
+
+    def remap(*args, **kw):
+        return _scatter_full(hw_fn(*args, **kw), ref_fn(*args, **kw))
+
+    if target == DEGRADED_REMAP or getattr(spec, "lane_slicer", None) is None:
+        return remap
+
+    keep = fault.survivors()
+    slicer = spec.lane_slicer
+
+    def reduced(*args, **kw):
+        nargs, nkw = slicer(args, dict(kw), keep)
+        narrow = hw_fn(*nargs, **nkw)
+        ref_out = ref_fn(*args, **kw)
+        idx = jnp.asarray(keep, jnp.int32)
+
+        def leaf(n, r):
+            if (hasattr(r, "dtype") and jnp.issubdtype(r.dtype, jnp.inexact)
+                    and r.ndim >= 1 and r.shape[-1] == fault.width
+                    and n.shape[-1] == len(keep)):
+                return r.at[..., idx].set(n.astype(r.dtype))
+            return n
+        return jax.tree_util.tree_map(leaf, narrow, ref_out)
+
+    return reduced

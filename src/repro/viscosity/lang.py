@@ -38,6 +38,14 @@ HW = "hw"              # optimized path (Pallas kernel on TPU; fused XLA here)
 SW = "sw"              # software fallback: the jnp oracle
 INTERPRET = "interpret"  # kernel body, interpreter mode (CPU validation)
 
+# The DEGRADED route family (partial degradation, paper §III-A; permanent-
+# fault remapping a la arxiv 1802.04657): intermediate rungs between the
+# optimized path and the full SW oracle, available once detection has
+# localized a lane map for the stage (``viscosity.lanefault``).
+DEGRADED_REMAP = "degraded_remap"      # HW full width; oracle heals dead lanes
+DEGRADED_REDUCED = "degraded_reduced"  # kernel shrunk to surviving lanes
+DEGRADED_TARGETS = (DEGRADED_REMAP, DEGRADED_REDUCED)
+
 
 @dataclass(frozen=True)
 class OpSpec:
@@ -49,6 +57,10 @@ class OpSpec:
     valid: Optional[Callable[[Any], Any]] = None  # validity predicate on outputs
     tol: float = 2e-2                             # hw-vs-sw allclose contract (bf16)
     flops: Optional[Callable[..., int]] = None    # analytic flop model (roofline)
+    # Reduced-width support (DEGRADED_REDUCED): (args, kw, keep_lanes) ->
+    # (args, kw) with the lane-axis operands sliced to the surviving lanes;
+    # the kernel then derives its output width from the sliced operand.
+    lane_slicer: Optional[Callable[..., Any]] = None
 
     def lower(self, target) -> Callable[..., Any]:
         if hasattr(target, "target_for"):   # RoutingPlan: my stage's entry
@@ -61,6 +73,9 @@ class OpSpec:
             return self.kernel
         if target == INTERPRET:
             return self.interpret or self.kernel
+        if target in DEGRADED_TARGETS:      # lane-mapped partial degradation
+            from repro.viscosity import lanefault
+            return lanefault.lower_degraded(self, target)
         raise ValueError(f"unknown lowering target {target!r} for op {self.name}")
 
     def __call__(self, *args, route=SW, **kw):
@@ -91,11 +106,12 @@ REGISTRY = Registry()
 
 
 def defop(name: str, *, ref, kernel=None, interpret=None, valid=None,
-          tol: float = 2e-2, flops=None) -> OpSpec:
+          tol: float = 2e-2, flops=None, lane_slicer=None) -> OpSpec:
     """Declare an op once; both lowerings become available framework-wide."""
     return REGISTRY.register(OpSpec(name=name, ref=ref, kernel=kernel,
                                     interpret=interpret, valid=valid,
-                                    tol=tol, flops=flops))
+                                    tol=tol, flops=flops,
+                                    lane_slicer=lane_slicer))
 
 
 def finite_valid(out) -> jax.Array:

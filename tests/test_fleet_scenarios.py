@@ -20,21 +20,42 @@ from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import Dispatcher, FaultSignature
-from repro.core.datacenter import replay_trace
+from repro.core.datacenter import DegradationModel, FleetHarness, replay_trace
 from repro.core.routing import FleetPlan, RoutingPlan, SparePool
 from repro.launch.distributed import (FleetEvent, HostTopology,
                                       merge_event_logs, replay_log)
 from repro.models import build_model
 from repro.serve import (RECOMPILE, RESIDENT, FleetConfig, FleetServeEngine,
-                         ServeConfig, reference_decode, synthetic_workload)
+                         Request, ServeConfig, reference_decode,
+                         synthetic_workload)
 from repro.train.runner import (FleetTrainConfig, FleetTrainRunner,
                                 TrainConfig, model_stage_names)
 from repro import optim
 from repro.data import DataConfig, SyntheticLM
-from repro.viscosity import INTERPRET, SW
+from repro.viscosity import (DEGRADED_REDUCED, DEGRADED_REMAP, INTERPRET,
+                             SW, lanefault)
+from repro.viscosity.lanefault import LaneFault
 
 ARCH = "qwen1.5-4b"
 STAGES = ["flash_attention", "swiglu_mlp"]   # model_stage_names(ARCH)
+
+# Localized lane maps for the DEGRADED-route scenarios; widths match the
+# reduced() model's kernel output lanes (head_dim=32, d_model=128).
+LANE_FAULTS = {
+    "flash_attention": LaneFault(kind=lanefault.DROPPED_MAC, lanes=(1, 5),
+                                 width=32),
+    "swiglu_mlp": LaneFault(kind=lanefault.STUCK, lanes=(3,), width=128),
+}
+
+
+@pytest.fixture
+def lane_maps():
+    """Register a localized lane map per stage (what a canary sweep with
+    localize=True would have recorded), base = the SW deployment target."""
+    for s, f in LANE_FAULTS.items():
+        lanefault.set_map(s, f, base=SW)
+    yield dict(LANE_FAULTS)
+    lanefault.reset()
 
 
 @pytest.fixture(scope="module")
@@ -338,6 +359,131 @@ def test_fleet_harness_tracks_analytic_curve():
                                       ref_cache[key])
         np.testing.assert_array_equal(healthy_done[r.rid].tokens,
                                       ref_cache[key])
+
+
+# ------------------------------------------------- DEGRADED route ladder
+def test_with_stage_fault_walks_degradation_ladder():
+    """Ladder algebra: a lane-mapped stage degrades remap -> reduced ->
+    SW across repeated faults; an unmapped stage still drops straight to
+    the binary fallback; recovery clears the ladder position."""
+    stage = "flash_attention"
+    with lanefault.known_map(stage, LANE_FAULTS[stage], base=SW):
+        fp = FleetPlan.healthy(2, STAGES, target=INTERPRET, n_spares=0)
+        fp1 = fp.with_stage_fault(0, stage)
+        assert fp1.plans[0].target_for(stage) == DEGRADED_REMAP
+        fp2 = fp1.with_stage_fault(0, stage)
+        assert fp2.plans[0].target_for(stage) == DEGRADED_REDUCED
+        fp3 = fp2.with_stage_fault(0, stage)
+        assert fp3.plans[0].target_for(stage) == SW
+        assert fp3.stage_fault_count(0, stage) == 3
+        assert fp3.n_faults(0) == 3
+        # the other device and the unmapped stage are untouched
+        assert fp3.plans[1].target_for(stage) == INTERPRET
+        assert fp3.with_stage_fault(1, "swiglu_mlp") \
+                  .plans[1].target_for("swiglu_mlp") == SW   # no map
+        # spare-migration still wins over in-place degradation
+        sp = FleetPlan.healthy(3, STAGES, target=INTERPRET, n_spares=1)
+        sp1 = sp.with_stage_fault(0, stage)
+        assert sp1.quarantined == (0,) and sp1.pool.spare_for(0) == 2
+        # recovery clears the device's ladder position entirely
+        rec = sp1.with_recovery(0, STAGES, target=INTERPRET)
+        assert rec.stage_fault_count(0, stage) == 0
+
+
+@pytest.mark.parametrize("mode", [RECOMPILE, RESIDENT])
+def test_degraded_ladder_scenario_bit_identical(setup, mode, lane_maps):
+    """The ISSUE scenario, in both failover modes: a lane fault routes the
+    stage to DEGRADED remap (NOT straight to SW), a second to reduced-width,
+    a third to the full SW oracle — while every completion stays
+    bit-identical to the healthy single-device reference."""
+    cfg, params = setup
+    stage = "flash_attention"
+    eng = _fleet(cfg, params, mode, n_devices=2, n_spares=0)
+    reqs = _workload(cfg)
+    done, stats = eng.serve(reqs, events={2: [("stage", 0, stage)],
+                                          4: [("stage", 0, stage)],
+                                          6: [("stage", 0, stage)]})
+    assert sorted(done) == sorted(r.rid for r in reqs)     # no drops
+    for r in reqs:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=48)
+        np.testing.assert_array_equal(done[r.rid].tokens, ref)
+    # the ladder actually walked: three faults accumulated, bottom = SW
+    assert eng.fleet.stage_fault_count(0, stage) == 3
+    assert eng.fleet.plans[0].target_for(stage) == SW
+    assert eng.fleet.plans[1].target_for(stage) == SW      # healthy target
+    assert 0 in eng.fleet.serving()                        # never dropped
+
+
+def test_degraded_ladder_intermediate_rungs_in_plan_cache(setup, lane_maps):
+    """RECOMPILE mode dispatches each rung through the plan-keyed compile
+    cache: remap and reduced-width are distinct executables; the final
+    SW rung dedupes against the healthy all-SW plan (zero new compiles)."""
+    cfg, params = setup
+    stage = "flash_attention"
+    eng = _fleet(cfg, params, RECOMPILE, n_devices=2, n_spares=0)
+    eng.serve(_workload(cfg, n=2))                         # healthy warm-up
+    eng.inject_stage_fault(0, stage)
+    assert eng.fleet.plans[0].target_for(stage) == DEGRADED_REMAP
+    _, s1 = eng.serve(_workload(cfg, n=2, seed=1))
+    assert s1["decode_compiles"] == 1                      # remap plan
+    eng.inject_stage_fault(0, stage)
+    assert eng.fleet.plans[0].target_for(stage) == DEGRADED_REDUCED
+    _, s2 = eng.serve(_workload(cfg, n=2, seed=2))
+    assert s2["decode_compiles"] == 1                      # reduced plan
+    eng.inject_stage_fault(0, stage)
+    assert eng.fleet.plans[0].target_for(stage) == SW
+    _, s3 = eng.serve(_workload(cfg, n=2, seed=3))
+    assert s3["decode_compiles"] == 0                      # == healthy SW
+
+
+def test_fleet_harness_partial_degradation_tracks_model(setup, lane_maps):
+    """Acceptance: with a DegradationModel and a lane-mapped stage, the
+    measured throughput of a partially-degraded fleet (remap / reduced
+    rungs instead of binary SW quarantines) closes against the analytic
+    per-rung capacity curve within 15%, completions bit-identical."""
+    cfg, params = setup
+    model = DegradationModel()
+    horizon, slots = 16, 4
+    # dev 0 walks flash's ladder twice (remap then reduced); dev 1 takes
+    # one remapped fault; pool dry so everything degrades in place
+    trace = ((2, 0), (6, 0), (10, 1))
+    rep = replay_trace(trace, n_workers=3, ticks=horizon,
+                       stage_names=STAGES, n_spares=0,
+                       slots_per_device=slots, max_faults=3, model=model,
+                       lane_mapped=("flash_attention",))
+    eng = FleetServeEngine(
+        cfg, params, ServeConfig(max_len=48, max_slots=slots, hw_route=SW,
+                                 failover=RECOMPILE),
+        FleetConfig(n_devices=3, n_spares=0, model=model))
+    rng = np.random.default_rng(5)
+    n_reqs = (3 * slots * horizon * 3) // (2 * 8)   # saturate the horizon
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=8).astype(np.int32),
+                    max_new_tokens=8)
+            for i in range(n_reqs)]
+    out = FleetHarness(eng, rep, horizon=horizon).run(reqs)
+    assert out["rel_err"] <= 0.15, out["rel_err"]
+    assert out["analytic_ratio"] < 1.0              # the trace bites...
+    # ...but partially: better than the binary all-SW accounting
+    binary = replay_trace(trace, n_workers=3, ticks=horizon,
+                          stage_names=STAGES, n_spares=0,
+                          slots_per_device=slots, max_faults=3)
+    assert out["analytic_ratio"] > binary.mean_ratio
+    # the engine really served on DEGRADED plans, charged per-rung slots
+    assert eng.fleet.plans[0].target_for("flash_attention") == \
+        DEGRADED_REDUCED
+    assert eng.fleet.plans[1].target_for("flash_attention") == \
+        DEGRADED_REMAP
+    assert eng.fcfg.capacity_for(2, slots, plan=eng.fleet.plans[0]) == \
+        model.slot_cap(slots, 2, (("flash_attention", DEGRADED_REDUCED),))
+    healthy_done, faulted_done = out["completions"]
+    for r in reqs:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=48)
+        np.testing.assert_array_equal(faulted_done[r.rid].tokens, ref)
+        np.testing.assert_array_equal(healthy_done[r.rid].tokens, ref)
 
 
 def test_replay_trace_spares_absorb_first_faults():
