@@ -38,12 +38,29 @@ def load(path: str) -> dict:
     return snap
 
 
+def _goodput(row: dict):
+    """Parse a ``goodput=<float>`` key out of a bench row's derived
+    string (the traffic benches carry virtual-clock goodput there)."""
+    for part in str(row.get("derived", "")).split(";"):
+        if part.startswith("goodput="):
+            try:
+                return float(part.split("=", 1)[1])
+            except ValueError:
+                return None
+    return None
+
+
 def compare(old: dict, new: dict, *, fail_ratio: float = 2.0,
-            warn_ratio: float = 1.25, min_us: float = 1.0):
+            warn_ratio: float = 1.25, min_us: float = 1.0,
+            goodput_drop: float = 0.2):
     """Yield (verdict, name, ratio, old_us, new_us) per bench.
 
     ``ratio`` is calibration-normalized new/old time (>1 = slower); None
-    for SKIP/MISSING/NEW rows where no ratio is defined.
+    for SKIP/MISSING/NEW rows where no ratio is defined.  Benches whose
+    ``derived`` carries ``goodput=`` in both snapshots additionally get
+    a GOODPUT row when the new goodput dropped more than
+    ``goodput_drop`` — goodput is virtual-clock (deterministic per
+    seed), so it is compared raw, with no calibration scaling.
     """
     ocal, ncal = old["calibration_us"], new["calibration_us"]
     for name, orow in sorted(old["benches"].items()):
@@ -53,6 +70,9 @@ def compare(old: dict, new: dict, *, fail_ratio: float = 2.0,
             yield "MISSING", name, None, ous, None
             continue
         nus = float(nrow["us_per_call"])
+        og, ng = _goodput(orow), _goodput(nrow)
+        if og and ng is not None and ng < og * (1.0 - goodput_drop):
+            yield "GOODPUT", name, ng / og, og, ng
         if ous < min_us:
             yield "SKIP", name, None, ous, nus
             continue
@@ -72,6 +92,9 @@ def main(argv=None) -> int:
     ap.add_argument("--fail-ratio", type=float, default=2.0)
     ap.add_argument("--warn-ratio", type=float, default=1.25)
     ap.add_argument("--min-us", type=float, default=1.0)
+    ap.add_argument("--goodput-drop", type=float, default=0.2,
+                    help="max tolerated fractional goodput drop for "
+                         "rows carrying goodput= in derived")
     args = ap.parse_args(argv)
 
     old, new = load(args.old), load(args.new)
@@ -81,7 +104,8 @@ def main(argv=None) -> int:
     counts: dict = {}
     for verdict, name, ratio, ous, nus in compare(
             old, new, fail_ratio=args.fail_ratio,
-            warn_ratio=args.warn_ratio, min_us=args.min_us):
+            warn_ratio=args.warn_ratio, min_us=args.min_us,
+            goodput_drop=args.goodput_drop):
         counts[verdict] = counts.get(verdict, 0) + 1
         if verdict in ("ok", "SKIP"):
             # SKIP rows are the analytic (0-us derived-metric) benches;
@@ -90,16 +114,18 @@ def main(argv=None) -> int:
         rtxt = f"{ratio:.2f}x" if ratio is not None else "-"
         otxt = f"{ous:.1f}" if ous is not None else "-"
         ntxt = f"{nus:.1f}" if nus is not None else "-"
+        unit = "tok/s" if verdict == "GOODPUT" else "us"
         print(f"{verdict:8s} {name:40s} {rtxt:>8s}  "
-              f"old {otxt}us  new {ntxt}us")
+              f"old {otxt}{unit}  new {ntxt}{unit}")
     total = sum(counts.values())
     print(f"# {total} benches: " + ", ".join(
         f"{v} {verdict.lower()}" for verdict, v in sorted(counts.items())))
-    bad = counts.get("FAIL", 0) + counts.get("MISSING", 0)
+    bad = (counts.get("FAIL", 0) + counts.get("MISSING", 0)
+           + counts.get("GOODPUT", 0))
     if bad:
         print(f"# REGRESSION: {bad} bench(es) failed the "
-              f">{args.fail_ratio:g}x gate (or went missing)",
-              file=sys.stderr)
+              f">{args.fail_ratio:g}x gate (goodput drop, or went "
+              f"missing)", file=sys.stderr)
         return 1
     return 0
 

@@ -33,6 +33,7 @@ MODULES = [
     "benchmarks.kernel_micro",       # per-kernel parity + wall
     "benchmarks.step_bench",         # staged train/serve under faults
     "benchmarks.serve_bench",        # continuous vs fixed-batch serving
+    "benchmarks.traffic_bench",      # open-loop goodput/tail under faults
     "benchmarks.fleet_bench",        # MC fault trace through the fleet
     "benchmarks.roofline",           # dry-run roofline summary
 ]

@@ -1,0 +1,233 @@
+"""Open-loop traffic benchmark: goodput + tail latency under faults.
+
+Drives seeded open-loop workloads (Poisson, diurnal, flash-crowd — see
+``repro.serve.traffic``) through the admission front end
+(``repro.serve.frontend``) over a 2-device ``FleetServeEngine``, healthy
+and with a mid-burst stage quarantine, in both failover modes.  This is
+the paper's §II Fig. 2 claim measured the honest way: arrivals do not
+wait for the system, so a quarantine that stalls the fleet shows up as
+queue growth, blown deadlines, and a p99 spike — not just a longer wall
+time.
+
+Reported per scenario: goodput (virtual-clock tokens/s over completions
+that met their deadline), p50/p99 end-to-end latency and TTFT, and
+deadline-met counts.  The *closure* scenario checks the degradation
+story end to end: under saturating Poisson load, the post-quarantine
+throughput ratio measured from per-step decoded tokens must match the
+``DegradationModel`` analytic capacity ratio within 15% relative error,
+with zero dropped non-expired requests (``run()`` raises otherwise — a
+silent miss can never ride a green bench).
+
+``python benchmarks/traffic_bench.py [--smoke]`` prints one JSON object;
+``run()`` returns the usual ``name,us_per_call,derived`` rows for
+``benchmarks/run.py`` (goodput rides in ``derived`` where
+``benchmarks/compare.py`` gates it against drops).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.datacenter import DegradationModel
+from repro.models import build_model
+from repro.serve import (BLOCK, RECOMPILE, RESIDENT, Diurnal, FlashCrowd,
+                         FleetConfig, FleetServeEngine, Frontend,
+                         FrontendConfig, LengthModel, Poisson, ServeConfig)
+from repro.viscosity import INTERPRET
+
+ARCH = "qwen1.5-4b"
+# Interpreted healthy lowering so the injected fault is a *real* reroute
+# (interpret -> SW oracle); with the SW route the ±fault comparison would
+# measure nothing (same rationale as serve_bench).
+HW_ROUTE = INTERPRET
+MAX_LEN = 48
+SLOTS = 3
+DEVICES = 2
+STEP_TIME_S = 0.05                   # virtual seconds per engine step
+FAULT_STAGE = "flash_attention"
+
+
+def _lengths(cfg):
+    # few distinct prompt lengths: prefill compiles once per length
+    return LengthModel(vocab_size=cfg.vocab_size, min_prompt=6,
+                       max_prompt=12, min_new=4, max_new=9,
+                       dist="pareto", alpha=1.8, clamp_len=MAX_LEN)
+
+
+def _patterns(cfg, n):
+    """(name, workload, fault_step): the fault step sits mid-burst /
+    mid-arrival for each arrival process."""
+    lm = _lengths(cfg)
+    slack = dict(slack_s=3.0, slack_per_token_s=0.15)
+    return [
+        ("poisson",
+         Poisson(n_requests=n, rate=14.0, lengths=lm, **slack), 10),
+        ("diurnal",
+         Diurnal(n_requests=n, base_rate=3.0, peak_rate=18.0,
+                 period_s=4.0, lengths=lm, **slack), 14),
+        ("flash_crowd",
+         FlashCrowd(n_requests=n, base_rate=5.0, burst_factor=7.0,
+                    burst_start_s=0.5, burst_dur_s=1.0, lengths=lm,
+                    **slack), 16),
+    ]
+
+
+def _engine(cfg, params, failover):
+    scfg = ServeConfig(max_len=MAX_LEN, max_slots=SLOTS,
+                       hw_route=HW_ROUTE, failover=failover)
+    fcfg = FleetConfig(n_devices=DEVICES, model=DegradationModel())
+    return FleetServeEngine(cfg, params, scfg, fcfg)
+
+
+def _run_one(eng, reqs, fault_step):
+    """One frontend run; fault_step=None keeps the fleet healthy.
+    Recovers the fleet afterwards so the engine (and its compile caches)
+    is reusable across scenarios."""
+    fe = Frontend(eng, FrontendConfig(step_time_s=STEP_TIME_S,
+                                      max_queue=4 * DEVICES * SLOTS,
+                                      shed=BLOCK))
+    events = ({fault_step: [("stage", 0, FAULT_STAGE)]}
+              if fault_step is not None else None)
+    t0 = time.perf_counter()
+    comps, stats = fe.run(reqs, events=events)
+    wall = time.perf_counter() - t0
+    if fault_step is not None:
+        eng.recover(0)
+    n_tok = sum(len(c.tokens) for c in comps.values())
+    return {
+        "goodput_tok_s": round(stats["goodput_tok_s"], 2),
+        "throughput_tok_s": round(stats["throughput_tok_s"], 2),
+        "p50_latency_s": round(stats["p50_latency_s"], 4),
+        "p99_latency_s": round(stats["p99_latency_s"], 4),
+        "p50_ttft_s": round(stats["p50_ttft_s"], 4),
+        "p99_ttft_s": round(stats["p99_ttft_s"], 4),
+        "deadline_met": stats["deadline_met"],
+        "completed": stats["completed"],
+        "expired": stats["expired"],
+        "requests": len(reqs),
+        "requeued": stats["engine"]["requeued"],
+        "virtual_time_s": round(stats["virtual_time_s"], 2),
+        "wall_s": round(wall, 2),
+        "wall_us_per_tok": round(1e6 * wall / max(n_tok, 1), 1),
+    }
+
+
+def _window_mean(xs, lo, hi):
+    w = xs[lo:hi]
+    return float(np.mean(w)) if w else 0.0
+
+
+def closure(cfg, params, seed, *, n=40, failover=RESIDENT):
+    """Measured-vs-analytic goodput closure under a mid-burst quarantine.
+
+    Saturating Poisson load (offered rate far above fleet capacity), no
+    deadlines, ``shed=BLOCK``: zero requests may be shed or expire.  The
+    per-step decoded-token mean over the post-fault window, relative to
+    the pre-fault window, must match the ``DegradationModel`` capacity
+    ratio (slot-quantized, straight from the engine's per-step capacity
+    trace) within 15%."""
+    fault_step = 12
+    wl = Poisson(n_requests=n, rate=60.0, lengths=_lengths(cfg))
+    reqs = wl.build(seed)
+    eng = _engine(cfg, params, failover)
+    fe = Frontend(eng, FrontendConfig(step_time_s=STEP_TIME_S,
+                                      max_queue=2 * n, shed=BLOCK))
+    comps, stats = fe.run(
+        reqs, events={fault_step: [("stage", 0, FAULT_STAGE)]})
+    eng.recover(0)
+    pst = stats["engine"]["per_step_tokens"]
+    cap = stats["engine"]["capacity"]
+    h_lo, h_hi = 4, fault_step                  # post-warmup, pre-fault
+    f_lo = fault_step + 2                       # post-drain/requeue
+    f_hi = min(f_lo + 20, int(0.8 * len(pst)))  # still saturated
+    measured = _window_mean(pst, f_lo, f_hi) / \
+        max(_window_mean(pst, h_lo, h_hi), 1e-9)
+    analytic = _window_mean(cap, f_lo, f_hi) / \
+        max(_window_mean(cap, h_lo, h_hi), 1e-9)
+    rel_err = abs(measured - analytic) / max(analytic, 1e-9)
+    dropped = [r.rid for r in reqs
+               if r.rid not in comps or comps[r.rid].expired]
+    return {
+        "failover": failover,
+        "n_requests": n,
+        "fault_step": fault_step,
+        "measured_ratio": round(measured, 4),
+        "analytic_ratio": round(analytic, 4),
+        "rel_err": round(rel_err, 4),
+        "dropped_non_expired": dropped,
+        "windows": {"healthy": [h_lo, h_hi], "fault": [f_lo, f_hi]},
+    }
+
+
+def bench(seed: int = 0, *, n: int = 20, closure_n: int = 40):
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    out = {"workload": {"arch": ARCH, "devices": DEVICES, "slots": SLOTS,
+                        "max_len": MAX_LEN, "requests": n, "seed": seed,
+                        "step_time_s": STEP_TIME_S},
+           "patterns": {}}
+    for mode in (RECOMPILE, RESIDENT):
+        eng = _engine(cfg, params, mode)   # one engine per mode: the
+        for name, wl, fault_step in _patterns(cfg, n):  # compile caches
+            reqs = wl.build(seed)                       # span patterns
+            cell = out["patterns"].setdefault(name, {})
+            cell[mode] = {
+                "healthy": _run_one(eng, reqs, None),
+                "fault": _run_one(eng, reqs, fault_step),
+            }
+    out["closure"] = closure(cfg, params, seed, n=closure_n)
+    return out
+
+
+def run(seed: int = 0):
+    """CSV rows for benchmarks/run.py (name, us_per_call, derived).
+
+    ``us_per_call`` is wall time per decoded token (runner-dependent,
+    calibration-normalized by compare.py); ``derived`` carries the
+    virtual-clock goodput and tails (deterministic given the seed) that
+    compare.py's goodput gate watches."""
+    res = bench(seed, n=16, closure_n=36)
+    rows = []
+    for pattern, cell in res["patterns"].items():
+        for mode, runs in cell.items():
+            for label, m in runs.items():
+                rows.append((
+                    f"traffic_{pattern}_{mode}_{label}",
+                    m["wall_us_per_tok"],
+                    f"goodput={m['goodput_tok_s']:.1f};"
+                    f"p50={m['p50_latency_s']*1e3:.0f}ms;"
+                    f"p99={m['p99_latency_s']*1e3:.0f}ms;"
+                    f"met={m['deadline_met']}/{m['requests']}"))
+    c = res["closure"]
+    if c["rel_err"] > 0.15 or c["dropped_non_expired"]:
+        raise RuntimeError(
+            f"goodput closure failed: rel_err={c['rel_err']} "
+            f"(measured {c['measured_ratio']} vs analytic "
+            f"{c['analytic_ratio']}), dropped={c['dropped_non_expired']}")
+    rows.append(("traffic_goodput_closure", 0.0,
+                 f"measured={c['measured_ratio']};"
+                 f"analytic={c['analytic_ratio']};"
+                 f"rel_err={c['rel_err']};dropped=0"))
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload/init RNG seed")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI sizing (same scenario coverage)")
+    args = ap.parse_args(argv)
+    out = bench(args.seed, n=10 if args.smoke else 20,
+                closure_n=30 if args.smoke else 40)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -494,10 +494,14 @@ class FleetPlan:
     def with_recovery(self, device: int, stage_names: Sequence[str], *,
                       target: str = HW) -> "FleetPlan":
         """Repaired device rejoins healthy; its spare (if any) drains back
-        to the idle pool."""
-        if device not in self.quarantined:
-            raise ValueError(f"device {device} is not quarantined; nothing "
-                             f"to recover")
+        to the idle pool.  Covers both quarantined devices and devices
+        degraded in place (stage faults riding the degradation ladder
+        with no quarantine — their serve capacity recovers too)."""
+        degraded = (self.fault_counts[device] > 0
+                    or any(k[0] == device for k, _ in self.stage_faults))
+        if device not in self.quarantined and not degraded:
+            raise ValueError(f"device {device} is neither quarantined nor "
+                             f"degraded; nothing to recover")
         plans = self._set_plan(
             device, RoutingPlan.for_stages(stage_names, target=target,
                                            default=self.plans[device].default))

@@ -82,11 +82,20 @@ RESIDENT = "resident"
 @dataclass(frozen=True)
 class Request:
     """One serving request: a prompt, a token budget, an arrival time
-    (measured in engine steps, so workloads are deterministic)."""
+    (measured in engine steps, so workloads are deterministic).
+
+    Open-loop traffic adds two optional fields: ``arrival_time`` is the
+    request's arrival on the *virtual clock* (seconds; the admission
+    front end releases it to the engine when the clock reaches it — the
+    step-based ``arrival`` stays the engine's own admission gate), and
+    ``deadline`` is the per-request SLO on the same clock (the front end
+    schedules EDF on it and evicts expired work)."""
     rid: int
     prompt: Any                      # (P,) int32 array-like
     max_new_tokens: int
     arrival: int = 0
+    arrival_time: Optional[float] = None   # virtual-clock seconds
+    deadline: Optional[float] = None       # virtual-clock SLO deadline
 
 
 @dataclass
@@ -101,6 +110,14 @@ class Completion:
     device: int = -1                 # fleet device that decoded it
     placeholder: bool = False        # True: decoded on a remote host —
     #                                  merge_completions fills in tokens
+    # SLO fields (virtual-clock seconds once a Frontend ran the workload;
+    # wall seconds when the engine ran bare).  ``expired`` completions
+    # were evicted at their deadline with only the tokens decoded so far.
+    queue_wait_s: float = 0.0        # arrival/eligible -> admission
+    ttft_s: float = 0.0              # arrival/eligible -> first token
+    deadline: Optional[float] = None
+    deadline_met: bool = True
+    expired: bool = False
 
 
 @dataclass
@@ -124,20 +141,44 @@ class ServeConfig:
 
 
 def validate_requests(requests: Sequence[Request], max_len: int):
-    """Request sanity shared by every engine front door."""
-    rids = [r.rid for r in requests]
-    if len(set(rids)) != len(rids):
-        raise ValueError("duplicate request ids")
+    """Request sanity shared by every engine front door.
+
+    Every rejection names the offending request id and field, so a bad
+    request in a 10k-request open-loop workload is findable from the
+    message alone."""
+    seen = set()
     for r in requests:
+        if r.rid in seen:
+            raise ValueError(f"request {r.rid}: duplicate request id "
+                             f"(field 'rid')")
+        seen.add(r.rid)
         if len(r.prompt) < 1:
-            raise ValueError(f"request {r.rid}: prompt must be non-empty")
+            raise ValueError(f"request {r.rid}: field 'prompt' must be "
+                             f"non-empty")
         if r.max_new_tokens < 1:
-            raise ValueError(f"request {r.rid}: max_new_tokens must be "
-                             f">= 1, got {r.max_new_tokens}")
+            raise ValueError(f"request {r.rid}: field 'max_new_tokens' "
+                             f"must be >= 1, got {r.max_new_tokens}")
         if len(r.prompt) + r.max_new_tokens > max_len:
             raise ValueError(
-                f"request {r.rid}: prompt ({len(r.prompt)}) + budget "
-                f"({r.max_new_tokens}) exceeds max_len {max_len}")
+                f"request {r.rid}: fields 'prompt' ({len(r.prompt)}) + "
+                f"'max_new_tokens' ({r.max_new_tokens}) exceed max_len "
+                f"{max_len}")
+        if r.arrival < 0:
+            raise ValueError(f"request {r.rid}: field 'arrival' must be "
+                             f">= 0, got {r.arrival}")
+        if r.arrival_time is not None and not r.arrival_time >= 0:
+            raise ValueError(f"request {r.rid}: field 'arrival_time' must "
+                             f"be >= 0, got {r.arrival_time}")
+        if r.deadline is not None:
+            if not r.deadline >= 0:
+                raise ValueError(f"request {r.rid}: field 'deadline' must "
+                                 f"be >= 0, got {r.deadline}")
+            t0 = r.arrival_time if r.arrival_time is not None else 0.0
+            if r.deadline <= t0:
+                raise ValueError(
+                    f"request {r.rid}: field 'deadline' ({r.deadline}) "
+                    f"must be after field 'arrival_time' ({t0}) — the "
+                    f"request would expire before it arrives")
 
 
 class _SlotPool:
@@ -163,6 +204,13 @@ class _SlotPool:
     def has_free_slot(self) -> bool:
         return (self.occupancy() < self.capacity
                 and any(sl is None for sl in self._slots))
+
+    def free_slots(self) -> int:
+        """Admissions this pool can take right now (capacity- and
+        physical-slot-limited) — the admission front end sizes its EDF
+        batch with this."""
+        free = sum(sl is None for sl in self._slots)
+        return max(0, min(self.capacity - self.occupancy(), free))
 
     def active_slots(self) -> List[int]:
         return [i for i, sl in enumerate(self._slots) if sl is not None]
@@ -194,7 +242,8 @@ class _SlotPool:
         return out
 
     def _finish(self, i: int, step: int, completions: Dict[int,
-                                                           "Completion"]):
+                                                           "Completion"],
+                *, expired: bool = False):
         sl = self._slots[i]
         completions[sl.rid] = Completion(
             rid=sl.rid,
@@ -202,8 +251,23 @@ class _SlotPool:
             prompt_len=sl.prompt_len, arrival=sl.arrival,
             admitted_step=sl.admitted_step, finished_step=step,
             latency_s=time.perf_counter() - sl.eligible_wall,
-            device=self.device_index, placeholder=self.placeholder)
+            device=self.device_index, placeholder=self.placeholder,
+            deadline=(sl.req.deadline if sl.req is not None else None),
+            deadline_met=not expired, expired=expired)
         self._slots[i] = None
+
+    def evict_rid(self, rid: int, step: int,
+                  completions: Dict[int, "Completion"]) -> bool:
+        """Deadline-expiry eviction: free the slot holding ``rid`` *now*
+        and emit an expired Completion carrying whatever tokens were
+        already decoded.  Returns False when ``rid`` holds no slot here.
+        Value-independent (slot lookup by rid only), so shadow twins
+        replay it in lockstep."""
+        for i, sl in enumerate(self._slots):
+            if sl is not None and sl.rid == rid:
+                self._finish(i, step, completions, expired=True)
+                return True
+        return False
 
 
 class ServeEngine(_SlotPool):
@@ -402,53 +466,35 @@ class ServeEngine(_SlotPool):
                 "tokens": len(active)}
 
     # -------------------------------------------------------------- run
+    def session(self) -> "EngineSession":
+        """Open a streaming serve session (resets the slot pool).  The
+        common front door for open-loop traffic: ``submit`` requests at
+        any time, ``step`` one engine tick, ``poll`` finished
+        completions, ``close`` for the final stats."""
+        return EngineSession(self)
+
     def serve(self, requests: Sequence[Request], *,
               fault_at_step: Optional[Tuple[int, str]] = None
               ) -> Tuple[Dict[int, Completion], Dict[str, Any]]:
-        """Run a workload to completion.
+        """Run a workload to completion (closed-loop wrapper over the
+        streaming session API — completions are bit-identical to driving
+        ``session()`` by hand).
 
         ``fault_at_step=(k, stage)`` quarantines ``stage`` just before
         engine step ``k`` (admissions and the decode tick at ``k`` already
         run rerouted).  Returns ({rid: Completion}, stats).
         """
         self._validate(requests)
-        self.reset_pool()
-        queue = collections.deque(
-            sorted(requests, key=lambda r: (r.arrival, r.rid)))
-        eligible_wall: Dict[int, float] = {}
-        completions: Dict[int, Completion] = {}
-        decode_keys = set()
-        prefill_compiles0 = self._prefill.compiles
-        stats: Dict[str, Any] = {"step_times": [], "occupancy": [],
-                                 "admitted": 0, "steps": 0}
-        step = 0
-        while queue or self.occupancy():
-            if fault_at_step is not None and step == fault_at_step[0]:
+        sess = self.session()
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            sess.submit(r, _validated=True)
+        while sess.pending():
+            if fault_at_step is not None and \
+                    sess.step_count == fault_at_step[0]:
                 self.inject_fault(fault_at_step[1])
-            now = time.perf_counter()
-            for r in queue:
-                if r.arrival <= step and r.rid not in eligible_wall:
-                    eligible_wall[r.rid] = now
-            # admission: arrived requests claim free slots (join)
-            while (self.has_free_slot() and queue
-                   and queue[0].arrival <= step):
-                req = queue.popleft()
-                self.admit(req, step, eligible_wall.get(req.rid, now),
-                           completions)
-                stats["admitted"] += 1
-            tick = self.decode_tick(step, completions)
-            if tick["active"] == 0:
-                step += 1            # idle tick: waiting on future arrivals
-                continue
-            decode_keys.add(tick["key"])
-            stats["step_times"].append(tick["dt"])
-            stats["occupancy"].append(tick["active"])
-            step += 1
-        stats["steps"] = step
-        stats["recompiles"] = max(0, len(decode_keys) - 1)
-        stats["decode_compiles"] = self._decode.compiles
-        stats["prefill_compiles"] = self._prefill.compiles - prefill_compiles0
-        return completions, stats
+            sess.step()
+        stats = sess.close()
+        return {c.rid: c for c in sess.poll()}, stats
 
     # ------------------------------------------------- fixed-batch compat
     def generate(self, prompts, n_new: int, *,
@@ -570,19 +616,22 @@ def merge_completions(coordinator, completions: Dict[int, Completion]
     masquerade as a merge artifact."""
     local = [[c.rid, np.asarray(c.tokens).tolist(), c.prompt_len,
               c.arrival, c.admitted_step, c.finished_step, c.latency_s,
-              c.device]
+              c.device, c.queue_wait_s, c.ttft_s, c.deadline,
+              c.deadline_met, c.expired]
              for c in completions.values() if not c.placeholder]
     payloads = coordinator.exchange(json.dumps(local))
     merged = dict(completions)
     for host, payload in enumerate(payloads):
         if host == coordinator.host_id:
             continue
-        for rid, toks, plen, arr, astep, fstep, lat, dev in \
-                json.loads(payload):
+        for rid, toks, plen, arr, astep, fstep, lat, dev, qw, ttft, \
+                dl, dmet, exp in json.loads(payload):
             merged[rid] = Completion(
                 rid=rid, tokens=np.asarray(toks, np.int32),
                 prompt_len=plen, arrival=arr, admitted_step=astep,
-                finished_step=fstep, latency_s=lat, device=dev)
+                finished_step=fstep, latency_s=lat, device=dev,
+                queue_wait_s=qw, ttft_s=ttft, deadline=dl,
+                deadline_met=dmet, expired=exp)
     unresolved = sorted(r for r, c in merged.items() if c.placeholder)
     if unresolved:
         raise RuntimeError(f"no host decoded request(s) {unresolved}: "
@@ -727,10 +776,19 @@ class FleetServeEngine:
         return self._apply(("recover", device), step=-1)
 
     # -------------------------------------------------------------- run
+    def session(self) -> "FleetSession":
+        """Open a streaming serve session across the fleet (resets every
+        slot pool).  Same submit/step/poll/close surface as the
+        single-device ``ServeEngine.session`` — ``step`` additionally
+        takes this step's fault events."""
+        return FleetSession(self)
+
     def serve(self, requests: Sequence[Request], *,
               events: Optional[Mapping[int, Sequence[Tuple]]] = None
               ) -> Tuple[Dict[int, Completion], Dict[str, Any]]:
-        """Run a workload to completion across the fleet.
+        """Run a workload to completion across the fleet (closed-loop
+        wrapper over the streaming session API — completions are
+        bit-identical to driving ``session()`` by hand).
 
         ``events[k]`` is a list of fault events applied just before engine
         step ``k``: ``("stage", device, stage_name)``,
@@ -748,117 +806,314 @@ class FleetServeEngine:
         returning.
         """
         validate_requests(requests, self.scfg.max_len)
-        for w in self.workers:
-            w.reset_pool()
-        self._sync_capacity()
         events = dict(events or {})
-        queue = collections.deque(
-            sorted(requests, key=lambda r: (r.arrival, r.rid)))
-        eligible_wall: Dict[int, float] = {}
-        completions: Dict[int, Completion] = {}
-        prefill0 = self._prefill.compiles if self._prefill else 0
-        decode0 = self._decode.compiles if self._decode else 0
-        stats: Dict[str, Any] = {
-            "admitted": 0, "steps": 0, "requeued": 0,
-            "per_step_tokens": [], "occupancy": [], "capacity": [],
-            "per_device_tokens": [0] * self.fcfg.n_devices}
-        step = 0
-        while queue or any(w.occupancy() for w in self.workers):
-            step_tokens = 0
-            step_events = events.pop(step, ())
-            if self.channel is not None:
-                # one shared ordered log: publish the locally observed
-                # slice, apply the canonical merge — every host folds the
-                # same transitions in the same order
-                step_events = [e.engine_tuple() for e in
-                               self.channel.exchange(step, step_events)]
-            drained: List[Request] = []
-            for ev in step_events:
-                drained.extend(self._apply(ev, step,
-                                           strict=self.channel is None))
-            if step_events:
-                # degradation shrank some pools: drain the overflow too,
-                # so capacity changes take effect this step, not after the
-                # old residents happen to finish
-                for d in self.fleet.serving():
-                    drained.extend(self.workers[d].drain_excess())
-            if drained:
-                stats["requeued"] += len(drained)
-                queue.extendleft(sorted(drained,
-                                        key=lambda r: (r.arrival, r.rid),
-                                        reverse=True))
-            now = time.perf_counter()
-            for r in queue:
-                if r.arrival <= step and r.rid not in eligible_wall:
-                    eligible_wall[r.rid] = now
-            # admission: queue head goes to the first device with capacity
-            serving = self.fleet.serving()
-            for d in serving:
-                w = self.workers[d]
-                while (w.has_free_slot() and queue
-                       and queue[0].arrival <= step):
-                    req = queue.popleft()
-                    step_tokens += w.admit(
-                        req, step, eligible_wall.get(req.rid, now),
-                        completions)
-                    stats["admitted"] += 1
-                    stats["per_device_tokens"][d] += 1
-            occupancy = 0
-            for d in serving:
-                tick = self.workers[d].decode_tick(step, completions)
-                occupancy += tick["active"]
-                step_tokens += tick["tokens"]
-                stats["per_device_tokens"][d] += tick["tokens"]
-            stats["per_step_tokens"].append(step_tokens)
-            stats["occupancy"].append(occupancy)
-            stats["capacity"].append(sum(self.workers[d].capacity
-                                         for d in serving))
-            step += 1
-            if step > 100_000:
-                raise RuntimeError("fleet serve did not converge (queue "
-                                   f"{len(queue)}, occupancy {occupancy})")
-        # Events scheduled past the drain point still change fleet health
-        # (a recovery at step 40 must not be silently lost because the
-        # workload finished at 35) — apply them now, in step order; no
-        # slots are occupied, so nothing drains.  Multi-host: one final
-        # exchange so late events reach every host too.
-        if self.channel is not None:
-            late = self.channel.exchange_many(
-                {s: list(v) for s, v in events.items()})
+        sess = self.session()
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            sess.submit(r, _validated=True)
+        while sess.pending():
+            sess.step(events.pop(sess.step_count, ()))
+        stats = sess.close(late_events=events)
+        return {c.rid: c for c in sess.poll()}, stats
+
+
+# ==========================================================================
+# Streaming session API (the one serve front door; ROADMAP "open-loop
+# traffic").  ``ServeEngine.serve`` / ``ServeEngine.generate`` /
+# ``FleetServeEngine.serve`` are thin closed-loop wrappers over these.
+# ==========================================================================
+class ServeSession:
+    """Streaming serve session: ``submit`` requests at any time (open-loop
+    admission), ``step`` the engine one tick, ``poll`` completions
+    finished since the last poll, ``close`` for the final stats.
+
+    Built entirely on the value-independent ``_SlotPool`` primitives, so
+    one session implementation serves both the single-device engine and
+    the fleet (and the fleet's multi-host deterministic replication keeps
+    working: scheduling never depends on token values or wall time).
+    ``cancel`` is deadline-expiry eviction — it frees a queued or
+    in-flight request immediately, emitting an expired Completion with
+    whatever tokens were already decoded.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.scfg = engine.scfg
+        self._queue: collections.deque = collections.deque()
+        self._rids: set = set()
+        self._eligible_wall: Dict[int, float] = {}
+        self._completions: Dict[int, Completion] = {}
+        self._delivered: set = set()
+        self.step_count = 0
+        self.closed = False
+        self.stats: Dict[str, Any] = {}
+
+    # -------------------------------------------------------- admission
+    def submit(self, req: Request, *, _validated: bool = False) -> None:
+        """Queue one request.  ``req.arrival`` is the earliest engine
+        step it may be admitted; requests submitted mid-session join the
+        live queue (open-loop traffic).  Admission from the queue is
+        FIFO in submission order once arrivals gate open — an SLO-aware
+        caller (``serve.frontend.Frontend``) orders its submissions."""
+        if self.closed:
+            raise RuntimeError("session is closed")
+        if not _validated:
+            validate_requests([req], self.scfg.max_len)
+        if req.rid in self._rids:
+            raise ValueError(f"request {req.rid}: duplicate request id "
+                             f"(field 'rid') in this session")
+        self._rids.add(req.rid)
+        self._queue.append(req)
+
+    def pending(self) -> bool:
+        """True while any submitted request is queued or in flight."""
+        return bool(self._queue) or self._occupancy() > 0
+
+    def poll(self) -> List[Completion]:
+        """Completions finished since the last poll (ascending rid)."""
+        out = [c for r, c in sorted(self._completions.items())
+               if r not in self._delivered]
+        self._delivered.update(c.rid for c in out)
+        return out
+
+    def cancel(self, rid: int) -> bool:
+        """Deadline-expiry eviction: abort a queued or in-flight request,
+        freeing its slot for work that can still meet its SLO.  Emits an
+        expired Completion (partial tokens if it was decoding).  Returns
+        False when ``rid`` is not live in this session."""
+        for i, r in enumerate(self._queue):
+            if r.rid == rid:
+                del self._queue[i]
+                now = time.perf_counter()
+                self._completions[rid] = Completion(
+                    rid=rid, tokens=np.asarray((), np.int32),
+                    prompt_len=len(r.prompt), arrival=r.arrival,
+                    admitted_step=-1, finished_step=self.step_count,
+                    latency_s=now - self._eligible_wall.get(rid, now),
+                    deadline=r.deadline, deadline_met=False, expired=True)
+                return True
+        return self._evict(rid)
+
+    # hooks ------------------------------------------------------------
+    def _occupancy(self) -> int:
+        raise NotImplementedError
+
+    def _evict(self, rid: int) -> bool:
+        raise NotImplementedError
+
+    def free_slots(self) -> int:
+        raise NotImplementedError
+
+    def _mark_eligible(self, now: float):
+        for r in self._queue:
+            if r.arrival <= self.step_count and \
+                    r.rid not in self._eligible_wall:
+                self._eligible_wall[r.rid] = now
+
+
+class EngineSession(ServeSession):
+    """Streaming session over one ``ServeEngine`` slot pool."""
+
+    def __init__(self, engine: "ServeEngine"):
+        super().__init__(engine)
+        engine.reset_pool()
+        self._decode_keys: set = set()
+        self._prefill0 = engine._prefill.compiles
+        self.stats = {"step_times": [], "occupancy": [],
+                      "admitted": 0, "steps": 0}
+
+    def _occupancy(self) -> int:
+        return self.engine.occupancy()
+
+    def free_slots(self) -> int:
+        return self.engine.free_slots()
+
+    def _evict(self, rid: int) -> bool:
+        return self.engine.evict_rid(rid, self.step_count,
+                                     self._completions)
+
+    def step(self, events: Sequence[Tuple] = ()) -> Dict[str, Any]:
+        """One engine step: admit arrived requests into free slots, then
+        one vmapped decode tick.  Returns the tick metrics (``active`` =
+        0 means the pool idled waiting on future arrivals)."""
+        if events:
+            raise ValueError("single-engine sessions take no fleet "
+                             "events; use ServeEngine.inject_fault (or "
+                             "serve's fault_at_step)")
+        eng, step = self.engine, self.step_count
+        now = time.perf_counter()
+        self._mark_eligible(now)
+        # admission: arrived requests claim free slots (join)
+        while (eng.has_free_slot() and self._queue
+               and self._queue[0].arrival <= step):
+            req = self._queue.popleft()
+            eng.admit(req, step, self._eligible_wall.get(req.rid, now),
+                      self._completions)
+            self.stats["admitted"] += 1
+        tick = eng.decode_tick(step, self._completions)
+        self.step_count += 1
+        if tick["active"]:
+            self._decode_keys.add(tick["key"])
+            self.stats["step_times"].append(tick["dt"])
+            self.stats["occupancy"].append(tick["active"])
+        return tick
+
+    def close(self) -> Dict[str, Any]:
+        if self.closed:
+            return self.stats
+        self.closed = True
+        eng, s = self.engine, self.stats
+        s["steps"] = self.step_count
+        s["recompiles"] = max(0, len(self._decode_keys) - 1)
+        s["decode_compiles"] = eng._decode.compiles
+        s["prefill_compiles"] = eng._prefill.compiles - self._prefill0
+        return s
+
+
+class FleetSession(ServeSession):
+    """Streaming session across a ``FleetServeEngine``'s per-device slot
+    pools.  ``step(events)`` additionally folds this step's fault events
+    (and, multi-host, the canonical merged event log) before admission —
+    drained requests from newly-quarantined devices re-queue at the
+    front, so no request is ever dropped."""
+
+    def __init__(self, engine: "FleetServeEngine"):
+        super().__init__(engine)
+        for w in engine.workers:
+            w.reset_pool()
+        engine._sync_capacity()
+        self._prefill0 = engine._prefill.compiles if engine._prefill else 0
+        self._decode0 = engine._decode.compiles if engine._decode else 0
+        self.stats = {"admitted": 0, "steps": 0, "requeued": 0,
+                      "per_step_tokens": [], "occupancy": [], "capacity": [],
+                      "per_device_tokens": [0] * engine.fcfg.n_devices}
+
+    def _occupancy(self) -> int:
+        return sum(w.occupancy() for w in self.engine.workers)
+
+    def free_slots(self) -> int:
+        return sum(self.engine.workers[d].free_slots()
+                   for d in self.engine.fleet.serving())
+
+    def _evict(self, rid: int) -> bool:
+        for w in self.engine.workers:
+            if w.evict_rid(rid, self.step_count, self._completions):
+                return True
+        return False
+
+    def step(self, events: Sequence[Tuple] = ()) -> Dict[str, Any]:
+        """One fleet step: fold fault events, drain/re-queue, admit
+        across the serving devices' pools, one decode tick per device."""
+        eng, step = self.engine, self.step_count
+        s = self.stats
+        step_tokens = 0
+        step_events = list(events)
+        if eng.channel is not None:
+            # one shared ordered log: publish the locally observed
+            # slice, apply the canonical merge — every host folds the
+            # same transitions in the same order
+            step_events = [e.engine_tuple() for e in
+                           eng.channel.exchange(step, step_events)]
+        drained: List[Request] = []
+        for ev in step_events:
+            drained.extend(eng._apply(ev, step,
+                                      strict=eng.channel is None))
+        if step_events:
+            # degradation shrank some pools: drain the overflow too,
+            # so capacity changes take effect this step, not after the
+            # old residents happen to finish
+            for d in eng.fleet.serving():
+                drained.extend(eng.workers[d].drain_excess())
+        if drained:
+            s["requeued"] += len(drained)
+            self._queue.extendleft(sorted(drained,
+                                          key=lambda r: (r.arrival, r.rid),
+                                          reverse=True))
+        now = time.perf_counter()
+        self._mark_eligible(now)
+        # admission: queue head goes to the first device with capacity
+        serving = eng.fleet.serving()
+        for d in serving:
+            w = eng.workers[d]
+            while (w.has_free_slot() and self._queue
+                   and self._queue[0].arrival <= step):
+                req = self._queue.popleft()
+                step_tokens += w.admit(
+                    req, step, self._eligible_wall.get(req.rid, now),
+                    self._completions)
+                s["admitted"] += 1
+                s["per_device_tokens"][d] += 1
+        occupancy = 0
+        for d in serving:
+            tick = eng.workers[d].decode_tick(step, self._completions)
+            occupancy += tick["active"]
+            step_tokens += tick["tokens"]
+            s["per_device_tokens"][d] += tick["tokens"]
+        s["per_step_tokens"].append(step_tokens)
+        s["occupancy"].append(occupancy)
+        s["capacity"].append(sum(eng.workers[d].capacity for d in serving))
+        self.step_count += 1
+        if self.step_count > 100_000:
+            raise RuntimeError("fleet serve did not converge (queue "
+                               f"{len(self._queue)}, occupancy "
+                               f"{occupancy})")
+        return {"active": occupancy, "dt": 0.0, "key": None,
+                "tokens": step_tokens}
+
+    def close(self, *, late_events: Optional[Mapping[int, Sequence[Tuple]]]
+              = None) -> Dict[str, Any]:
+        """Finalize: apply events scheduled past the drain point (a
+        recovery at step 40 must not be silently lost because the
+        workload finished at 35), then — multi-host — merge completions
+        across hosts.  Poll *after* close in multi-host mode, so
+        placeholders are resolved."""
+        if self.closed:
+            return self.stats
+        self.closed = True
+        eng, s = self.engine, self.stats
+        late_events = dict(late_events or {})
+        if eng.channel is not None:
+            late = eng.channel.exchange_many(
+                {k: list(v) for k, v in late_events.items()})
             for e in late:
-                self._apply(e.engine_tuple(), step=e.step, strict=False)
-            stats["late_events"] = len(late)
+                eng._apply(e.engine_tuple(), step=e.step, strict=False)
+            s["late_events"] = len(late)
         else:
-            for s in sorted(events):
-                for ev in events[s]:
-                    self._apply(ev, step=s)
-            stats["late_events"] = sum(len(v) for v in events.values())
-        stats["steps"] = step
-        stats["decode_compiles"] = (self._decode.compiles - decode0
-                                    if self._decode else 0)
-        stats["prefill_compiles"] = (self._prefill.compiles - prefill0
-                                     if self._prefill else 0)
-        stats["quarantined"] = list(self.fleet.quarantined)
-        stats["spares_in_service"] = list(self.fleet.pool.in_service())
-        if self.channel is not None:
+            for k in sorted(late_events):
+                for ev in late_events[k]:
+                    eng._apply(ev, step=k)
+            s["late_events"] = sum(len(v) for v in late_events.values())
+        s["steps"] = self.step_count
+        s["decode_compiles"] = (eng._decode.compiles - self._decode0
+                                if eng._decode else 0)
+        s["prefill_compiles"] = (eng._prefill.compiles - self._prefill0
+                                 if eng._prefill else 0)
+        s["quarantined"] = list(eng.fleet.quarantined)
+        s["spares_in_service"] = list(eng.fleet.pool.in_service())
+        if eng.channel is not None:
             # merged result + cross-host plan agreement witness
-            stats["fleet_fingerprint"] = fleet_fingerprint(self.fleet)
-            completions = merge_completions(self.coordinator, completions)
+            s["fleet_fingerprint"] = fleet_fingerprint(eng.fleet)
+            ph = {r for r, c in self._completions.items()
+                  if c.placeholder}
+            self._completions = merge_completions(eng.coordinator,
+                                                  self._completions)
+            # placeholders polled mid-run re-deliver resolved: a
+            # streaming caller's post-close poll() gets the real tokens
+            self._delivered -= ph
         else:
             # host-partitioned but uncoordinated (shadow-bookkeeping
             # mode): remote completions are placeholders with no tokens.
             # Legitimate for schedule tests — but never silent, so a
             # forgotten coordinator cannot read as empty decodes.
-            unresolved = sorted(r for r, c in completions.items()
+            unresolved = sorted(r for r, c in self._completions.items()
                                 if c.placeholder)
-            stats["unresolved_placeholders"] = unresolved
+            s["unresolved_placeholders"] = unresolved
             if unresolved:
                 warnings.warn(
                     f"FleetServeEngine returned {len(unresolved)} "
                     "placeholder completion(s) decoded on remote shadow "
                     "devices; pass a coordinator to merge real tokens "
                     "across hosts", stacklevel=2)
-        return completions, stats
+        return s
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -872,18 +1127,15 @@ def synthetic_workload(vocab_size: int, n_requests: int, rng, *,
                        min_new: int = 3, max_new: int = 10,
                        arrival_every: int = 2, per_arrival: int = 1
                        ) -> List[Request]:
-    """Staggered random workload: ``n_requests`` requests with prompt
-    lengths in [min_prompt, max_prompt], budgets in [min_new, max_new],
-    arriving ``per_arrival`` at a time every ``arrival_every`` engine
-    steps.  One builder for the tests, examples, launcher, and benches."""
-    return [Request(rid=i,
-                    prompt=rng.integers(0, vocab_size,
-                                        size=int(rng.integers(
-                                            min_prompt, max_prompt + 1))
-                                        ).astype(np.int32),
-                    max_new_tokens=int(rng.integers(min_new, max_new + 1)),
-                    arrival=(i // per_arrival) * arrival_every)
-            for i in range(n_requests)]
+    """Compatibility shim: the workload builders live in
+    ``repro.serve.traffic`` now (this staggered closed-loop shape is
+    ``ClosedLoop``).  Kept so old import paths and call sites produce
+    bit-identical request lists.  Imported lazily — traffic.py imports
+    Request from this module."""
+    from repro.serve.traffic import synthetic_workload as _sw
+    return _sw(vocab_size, n_requests, rng, min_prompt=min_prompt,
+               max_prompt=max_prompt, min_new=min_new, max_new=max_new,
+               arrival_every=arrival_every, per_arrival=per_arrival)
 
 
 def reference_decode(cfg: ModelConfig, params, prompt, n_new: int, *,

@@ -1,0 +1,240 @@
+"""Admission front end: virtual-clock release/admission ordering,
+deadline-expiry eviction freeing slots on both engines, shedding
+policies, fleet flash-crowd + mid-burst quarantine with zero drops, and
+the fleet serve()-vs-session bit-identity contract.
+
+Engines are built once per shape and reused across tests/examples
+(sessions reset the slot pools), keeping jit compiles to a handful:
+every prompt is the same length, so prefill compiles once per plan.
+"""
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (BLOCK, REJECT, SHED_LATEST, FlashCrowd,
+                         FleetConfig, FleetServeEngine, Frontend,
+                         FrontendConfig, LengthModel, Request,
+                         ServeConfig, ServeEngine)
+
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 32
+PLEN = 6                             # one prompt length -> one prefill jit
+DT = 0.05
+
+_cache = {}
+
+
+def _setup():
+    if "model" not in _cache:
+        cfg = get_config("qwen1.5-4b").reduced()
+        params = build_model(cfg).init(KEY)
+        _cache["model"] = (cfg, params)
+    return _cache["model"]
+
+
+def _engine(slots):
+    key = ("eng", slots)
+    if key not in _cache:
+        cfg, params = _setup()
+        _cache[key] = ServeEngine(cfg, params,
+                                  ServeConfig(max_len=MAX_LEN,
+                                              max_slots=slots))
+    return _cache[key]
+
+
+def _fleet(n_devices, slots, degradation=None):
+    key = ("fleet", n_devices, slots, degradation)
+    if key not in _cache:
+        cfg, params = _setup()
+        _cache[key] = FleetServeEngine(
+            cfg, params, ServeConfig(max_len=MAX_LEN, max_slots=slots),
+            FleetConfig(n_devices=n_devices, degradation=degradation))
+    return _cache[key]
+
+
+def _req(rid, budget, *, arrival_time=None, deadline=None):
+    cfg, _ = _setup()
+    rng = np.random.default_rng(1000 + rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(0, cfg.vocab_size, size=PLEN
+                                       ).astype(np.int32),
+                   max_new_tokens=budget, arrival_time=arrival_time,
+                   deadline=deadline)
+
+
+# ------------------------------------------------------- virtual clock
+@settings(max_examples=8, deadline=None)
+@given(offsets=st.lists(st.floats(min_value=0.0, max_value=1.2),
+                        min_size=2, max_size=5),
+       budgets=st.lists(st.integers(min_value=2, max_value=5),
+                        min_size=5, max_size=5))
+def test_virtual_clock_never_admits_before_arrival(offsets, budgets):
+    """Property: a request is never admitted to the engine before the
+    virtual clock reaches its arrival_time (admitted_step*dt >= t)."""
+    reqs = [_req(i, budgets[i], arrival_time=float(t))
+            for i, t in enumerate(offsets)]
+    fe = Frontend(_engine(2), FrontendConfig(step_time_s=DT))
+    comps, _stats = fe.run(reqs)
+    assert set(comps) == {r.rid for r in reqs}
+    for r in reqs:
+        c = comps[r.rid]
+        assert c.admitted_step * DT >= r.arrival_time - 1e-9, \
+            (r.rid, r.arrival_time, c.admitted_step)
+        assert c.queue_wait_s >= -1e-9
+        assert c.ttft_s >= c.queue_wait_s - 1e-9
+
+
+# ---------------------------------------------------- deadline expiry
+def _expiry_scenario(engine):
+    """A hog with a tight deadline holds the only slot; a later request
+    can only complete if expiry eviction frees that slot."""
+    hog = _req(0, 20, arrival_time=0.0, deadline=0.3)
+    late = _req(1, 3, arrival_time=0.1, deadline=5.0)
+    fe = Frontend(engine, FrontendConfig(step_time_s=DT))
+    comps, stats = fe.run([hog, late])
+    assert set(comps) == {0, 1}
+    assert comps[0].expired and not comps[0].deadline_met
+    # partial output: it decoded until the clock passed 0.3s
+    assert 0 < len(comps[0].tokens) < 20
+    assert comps[1].deadline_met and len(comps[1].tokens) == 3
+    # the slot was freed by the eviction, not by the hog finishing
+    assert comps[1].admitted_step <= 0.3 / DT + 2
+    assert stats["expired_in_flight"] == [0]
+
+
+def test_deadline_expiry_frees_slots_single_engine():
+    _expiry_scenario(_engine(1))
+
+
+def test_deadline_expiry_frees_slots_fleet_engine():
+    _expiry_scenario(_fleet(1, 1))
+
+
+def test_expired_queued_request_never_reaches_engine():
+    """A queued request whose deadline passes before a slot frees is
+    shed from the front-end queue with admitted_step == -1."""
+    hog = _req(0, 12, arrival_time=0.0, deadline=10.0)
+    # arrives after the hog owns the only slot; expires while queued
+    doomed = _req(1, 3, arrival_time=0.05, deadline=0.2)
+    comps, stats = Frontend(_engine(1), FrontendConfig(
+        step_time_s=DT)).run([hog, doomed])
+    assert comps[1].expired and comps[1].admitted_step == -1
+    assert len(comps[1].tokens) == 0
+    assert stats["expired_queued"] == [1]
+    assert comps[0].deadline_met
+
+
+# ------------------------------------------------------ shed policies
+def test_shed_reject_policy():
+    """Releases hit the bounded queue before this step's admissions
+    drain it: 5 simultaneous arrivals into max_queue=2 reject 3."""
+    reqs = [_req(i, 4, arrival_time=0.0) for i in range(5)]
+    comps, stats = Frontend(_engine(1), FrontendConfig(
+        step_time_s=DT, max_queue=2, shed=REJECT)).run(reqs)
+    assert len(stats["shed"]) == 3
+    for rid in stats["shed"]:
+        assert comps[rid].expired and len(comps[rid].tokens) == 0
+    done = [c for c in comps.values() if not c.expired]
+    assert len(done) == 2 and all(len(c.tokens) == 4 for c in done)
+
+
+def test_shed_latest_deadline_policy():
+    """The victim is whoever can wait longest — an already-queued lax
+    request is evicted to make room for the urgent one, and the
+    no-deadline request (can wait forever) is refused at the door."""
+    lax = _req(0, 3, arrival_time=0.0, deadline=30.0)
+    urgent = _req(1, 3, arrival_time=0.0, deadline=0.6)
+    lazier = _req(2, 3, arrival_time=0.0)          # no deadline at all
+    comps, stats = Frontend(_engine(1), FrontendConfig(
+        step_time_s=DT, max_queue=1, shed=SHED_LATEST)).run(
+        [lax, urgent, lazier])
+    assert stats["shed"] == [0, 2]
+    assert 1 not in stats["shed"]
+    assert comps[1].deadline_met and len(comps[1].tokens) == 3
+
+
+def test_block_policy_drops_nothing():
+    reqs = [_req(i, 3, arrival_time=0.0) for i in range(6)]
+    comps, stats = Frontend(_engine(2), FrontendConfig(
+        step_time_s=DT, max_queue=2, shed=BLOCK)).run(reqs)
+    assert stats["shed"] == [] and stats["expired"] == 0
+    assert all(len(c.tokens) == 3 for c in comps.values())
+
+
+# ------------------------------------------- fleet: burst + quarantine
+def test_flash_crowd_mid_burst_quarantine_drops_nothing():
+    """A flash-crowd burst overlapping a stage quarantine: capacity
+    halves on the faulted device mid-burst, yet every request completes
+    (drain/re-queue, zero non-expired drops) with tokens bit-identical
+    to the healthy run."""
+    cfg, _ = _setup()
+    lm = LengthModel(vocab_size=cfg.vocab_size, min_prompt=PLEN,
+                     max_prompt=PLEN, min_new=3, max_new=6)
+    wl = FlashCrowd(n_requests=12, base_rate=6.0, burst_factor=8.0,
+                    burst_start_s=0.2, burst_dur_s=0.6, lengths=lm,
+                    slack_s=30.0)    # generous SLO: nothing may expire
+    reqs = wl.build(9)
+    eng = _fleet(2, 2, degradation=(1.0, 0.5))
+    burst_step = int(0.4 / DT)       # mid-burst
+    comps, stats = Frontend(eng, FrontendConfig(step_time_s=DT)).run(
+        reqs, events={burst_step: [("stage", 0, "flash_attention")]})
+    eng.recover(0)
+    assert set(comps) == {r.rid for r in reqs}
+    assert stats["expired"] == 0 and stats["shed"] == []
+    assert all(c.deadline_met for c in comps.values())
+    healthy, _ = Frontend(eng, FrontendConfig(step_time_s=DT)).run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(comps[r.rid].tokens,
+                                      healthy[r.rid].tokens)
+
+
+def test_fleet_serve_is_thin_wrapper_over_session():
+    cfg, _ = _setup()
+    lm = LengthModel(vocab_size=cfg.vocab_size, min_prompt=PLEN,
+                     max_prompt=PLEN, min_new=3, max_new=6)
+    reqs = FlashCrowd(n_requests=8, base_rate=20.0, lengths=lm).build(2)
+    eng = _fleet(2, 2, degradation=(1.0, 0.5))
+    events = {3: [("stage", 1, "flash_attention")]}
+    done, stats = eng.serve(reqs, events=dict(events))
+    eng.recover(1)
+
+    sess = eng.session()
+    for r in sorted(reqs, key=lambda r: (r.arrival, r.rid)):
+        sess.submit(r)
+    ev = dict(events)
+    while sess.pending():
+        sess.step(ev.pop(sess.step_count, ()))
+    sstats = sess.close(late_events=ev)
+    eng.recover(1)
+    streamed = {c.rid: c for c in sess.poll()}
+    assert set(streamed) == set(done)
+    for rid, c in done.items():
+        np.testing.assert_array_equal(c.tokens, streamed[rid].tokens)
+        assert (c.admitted_step, c.finished_step, c.device) == \
+            (streamed[rid].admitted_step, streamed[rid].finished_step,
+             streamed[rid].device)
+    for k in ("admitted", "steps", "requeued", "per_step_tokens",
+              "capacity", "quarantined"):
+        assert stats[k] == sstats[k], k
+
+
+# ------------------------------------------------------------- errors
+def test_frontend_interface_validation():
+    with pytest.raises(ValueError):
+        FrontendConfig(shed="yolo")
+    with pytest.raises(ValueError):
+        FrontendConfig(order="lifo")
+    with pytest.raises(ValueError):
+        FrontendConfig(step_time_s=0.0)
+    with pytest.raises(ValueError, match="fault_at_step"):
+        Frontend(_engine(1)).run([_req(0, 2)],
+                                 events={0: [("device", 0)]})
+    with pytest.raises(ValueError, match="events"):
+        Frontend(_fleet(1, 1)).run([_req(0, 2)],
+                                   fault_at_step=(0, "flash_attention"))
+    sess = _engine(1).session()
+    with pytest.raises(ValueError, match="events"):
+        sess.step([("device", 0)])

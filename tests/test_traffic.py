@@ -1,0 +1,163 @@
+"""Open-loop traffic generators: seeded determinism, legacy
+bit-compatibility, arrival-process shape, heavy-tail sampling, and the
+loud id+field request validation errors.  Pure numpy — no model, no jit.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import (ClosedLoop, Diurnal, FlashCrowd, LengthModel,
+                         Poisson, Request, synthetic_workload,
+                         validate_requests, with_deadlines)
+from repro.serve.traffic import bounded_pareto
+
+
+def _legacy_synthetic(vocab_size, n_requests, rng, *, min_prompt=4,
+                      max_prompt=20, min_new=3, max_new=10,
+                      arrival_every=2, per_arrival=1):
+    """Verbatim copy of the pre-traffic-layer builder: the draw-order
+    contract ClosedLoop must keep."""
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab_size,
+                                        size=int(rng.integers(
+                                            min_prompt, max_prompt + 1))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(min_new, max_new + 1)),
+                    arrival=(i // per_arrival) * arrival_every)
+            for i in range(n_requests)]
+
+
+def test_synthetic_workload_bit_identical_to_legacy():
+    old = _legacy_synthetic(331, 24, np.random.default_rng(5),
+                            per_arrival=2, max_prompt=17)
+    new = synthetic_workload(331, 24, np.random.default_rng(5),
+                             per_arrival=2, max_prompt=17)
+    # the old import path must keep working too
+    from repro.serve.engine import synthetic_workload as engine_sw
+    shim = engine_sw(331, 24, np.random.default_rng(5), per_arrival=2,
+                     max_prompt=17)
+    for variant in (new, shim):
+        assert [r.rid for r in variant] == [r.rid for r in old]
+        for a, b in zip(old, variant):
+            np.testing.assert_array_equal(a.prompt, b.prompt)
+            assert a.max_new_tokens == b.max_new_tokens
+            assert a.arrival == b.arrival
+
+
+def test_closed_loop_is_degenerate_arrival_process():
+    wl = ClosedLoop(n_requests=9, arrival_every=3, per_arrival=2,
+                    lengths=LengthModel(vocab_size=100))
+    reqs = wl.build(0)
+    assert [r.arrival for r in reqs] == [0, 0, 3, 3, 6, 6, 9, 9, 12]
+    assert all(r.arrival_time is None and r.deadline is None
+               for r in reqs)
+
+
+@pytest.mark.parametrize("wl", [
+    Poisson(n_requests=40, rate=12.0),
+    Diurnal(n_requests=40, base_rate=2.0, peak_rate=25.0, period_s=5.0),
+    FlashCrowd(n_requests=40, base_rate=4.0, burst_factor=10.0,
+               burst_start_s=1.0, burst_dur_s=1.0),
+])
+def test_open_loop_arrivals_sorted_deterministic(wl):
+    a = wl.build(3)
+    b = wl.build(3)
+    c = wl.build(4)
+    ts = [r.arrival_time for r in a]
+    assert all(t is not None and t >= 0 for t in ts)
+    assert ts == sorted(ts)
+    assert ts == [r.arrival_time for r in b]          # same seed replays
+    assert ts != [r.arrival_time for r in c]          # seeds matter
+    # arrival process and length draws are independent streams in order:
+    # lengths depend only on (seed, n), not on which process ran first
+    assert [len(r.prompt) for r in a] == [len(r.prompt) for r in b]
+
+
+def test_poisson_rate_scaling():
+    fast = Poisson(n_requests=300, rate=50.0).build(0)
+    slow = Poisson(n_requests=300, rate=5.0).build(0)
+    assert fast[-1].arrival_time < slow[-1].arrival_time / 5
+
+
+def test_flash_crowd_concentrates_arrivals():
+    wl = FlashCrowd(n_requests=200, base_rate=4.0, burst_factor=12.0,
+                    burst_start_s=2.0, burst_dur_s=1.0)
+    ts = np.asarray([r.arrival_time for r in wl.build(1)])
+    in_burst = np.sum((ts >= 2.0) & (ts < 3.0))
+    before = np.sum(ts < 2.0)
+    # ~12x the base intensity inside the 1s window vs 2s of baseline
+    assert in_burst > 3 * before
+
+
+def test_diurnal_peak_density():
+    wl = Diurnal(n_requests=400, base_rate=1.0, peak_rate=30.0,
+                 period_s=8.0)
+    ts = np.asarray([r.arrival_time for r in wl.build(2)])
+    phase = np.mod(ts, 8.0)
+    near_peak = np.sum(np.abs(phase - 4.0) < 2.0)   # middle half-period
+    off_peak = np.sum(np.abs(phase - 4.0) >= 2.0)
+    assert near_peak > 2 * off_peak
+
+
+def test_bounded_pareto_bounds_and_tail():
+    rng = np.random.default_rng(0)
+    xs = [bounded_pareto(rng, 4, 256, 1.2) for _ in range(3000)]
+    assert min(xs) >= 4 and max(xs) <= 256
+    # heavy tail: median well below the midpoint, but the max gets close
+    # to the cap
+    assert np.median(xs) < 30
+    assert max(xs) > 128
+
+
+def test_length_model_clamp_and_deadlines():
+    lm = LengthModel(vocab_size=50, min_prompt=4, max_prompt=30,
+                     min_new=2, max_new=40, dist="pareto", clamp_len=32)
+    wl = Poisson(n_requests=100, rate=10.0, lengths=lm, slack_s=2.0,
+                 slack_per_token_s=0.1)
+    reqs = wl.build(6)
+    for r in reqs:
+        assert len(r.prompt) + r.max_new_tokens <= 32
+        assert r.max_new_tokens >= 1
+        assert r.deadline == pytest.approx(
+            r.arrival_time + 2.0 + 0.1 * r.max_new_tokens)
+    validate_requests(reqs, 32)      # engine-admissible as built
+    with pytest.raises(ValueError):
+        LengthModel(vocab_size=50, dist="cauchy")
+
+
+def test_with_deadlines_helper():
+    reqs = ClosedLoop(n_requests=4,
+                      lengths=LengthModel(vocab_size=20)).build(0)
+    out = with_deadlines(reqs, slack_s=1.5, slack_per_token_s=0.5)
+    for r in out:
+        assert r.deadline == pytest.approx(
+            1.5 + 0.5 * r.max_new_tokens)
+
+
+def test_validation_names_request_and_field():
+    ok = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError, match=r"request 7.*field 'deadline'"):
+        validate_requests([ok, Request(rid=7,
+                                       prompt=np.zeros(4, np.int32),
+                                       max_new_tokens=2, deadline=-3.0)],
+                          16)
+    with pytest.raises(ValueError, match=r"request 8.*field 'deadline'"
+                                         r".*expire before it arrives"):
+        validate_requests([Request(rid=8, prompt=np.zeros(4, np.int32),
+                                   max_new_tokens=2, arrival_time=4.0,
+                                   deadline=4.0)], 16)
+    with pytest.raises(ValueError,
+                       match=r"request 9.*field 'arrival_time'"):
+        validate_requests([Request(rid=9, prompt=np.zeros(4, np.int32),
+                                   max_new_tokens=2,
+                                   arrival_time=float("nan"))], 16)
+    with pytest.raises(ValueError, match=r"request 2.*field 'arrival'"):
+        validate_requests([Request(rid=2, prompt=np.zeros(4, np.int32),
+                                   max_new_tokens=2, arrival=-1)], 16)
+    with pytest.raises(ValueError,
+                       match=r"request 1.*field 'max_new_tokens'"):
+        validate_requests([Request(rid=1, prompt=np.zeros(4, np.int32),
+                                   max_new_tokens=0)], 16)
+    # a deadline with no arrival_time counts from t=0
+    with pytest.raises(ValueError, match=r"request 3.*field 'deadline'"):
+        validate_requests([Request(rid=3, prompt=np.zeros(4, np.int32),
+                                   max_new_tokens=2, deadline=0.0)], 16)
