@@ -1,0 +1,93 @@
+"""Chaos campaign bench: randomized fault-schedule soak + MTTR.
+
+Drives ``repro.chaos.run_campaign`` — seeded randomized fault schedules
+over the full taxonomy (transient upsets, persistent stage faults,
+localized lane faults, device/host losses, spare-exhaustion bursts,
+coordinator stalls) injected mid-run into a ``FleetServeEngine`` under
+open-loop traffic (both failover modes), a data-parallel
+``FleetTrainRunner`` with probation + checkpoint restore, and a
+``KVCoordinator`` against a stalling peer.  Every run checks the
+fault-tolerance invariants (zero non-expired drops, replayed-log
+fingerprint agreement, degradation-ladder rungs, transient cleanup,
+measured-vs-DegradationModel closure); ``run()`` raises on any
+violation so a broken invariant can never ride a green bench.
+
+Reported per section: mean per-event MTTR (virtual-clock for serve,
+step-clock for train, wall-bounded-by-retry-budget for the
+coordinator), which ``benchmarks/compare.py`` gates against growth the
+same way it gates goodput drops.
+
+``python benchmarks/chaos_bench.py [--smoke] [--seed N]`` prints the
+full campaign report as one JSON object; ``run()`` returns the usual
+``name,us_per_call,derived`` rows for ``benchmarks/run.py`` at smoke
+sizing (same scenario coverage, smaller schedules).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.chaos.campaign import run_campaign
+
+
+def _mttr_of(section) -> float:
+    mt = section.get("mttr_summary") or {}
+    return float(mt.get("mean_s") or 0.0)
+
+
+def run(seed: int = 0):
+    """CSV rows for benchmarks/run.py (name, us_per_call, derived).
+
+    ``us_per_call`` is wall time per injected fault event (the soak is
+    dominated by engine steps between events); ``derived`` carries the
+    deterministic campaign metrics — mean MTTR, event count, and the
+    survival/closure evidence compare.py's gates watch."""
+    t0 = time.perf_counter()
+    res = run_campaign(seed, smoke=True, raise_on_failure=True)
+    wall = time.perf_counter() - t0
+    us_per_event = 1e6 * wall / max(res["events_total"], 1)
+    rows = []
+    for mode, sec in sorted(res["serve"].items()):
+        t = sec["traffic"]
+        rows.append((
+            f"chaos_serve_{mode}", us_per_event,
+            f"mttr={_mttr_of(sec):.4f};events={sec['n_events']};"
+            f"completed={t['completed']}/{t['requests']};"
+            f"expired={t['expired']}"))
+    tr = res["train"]
+    rows.append((
+        "chaos_train", us_per_event,
+        f"mttr={_mttr_of(tr):.4f};events={tr['n_events']};"
+        f"steps={tr['steps']};trips={tr['guard_trips']}"))
+    co = res["coordinator"]
+    rows.append((
+        "chaos_coordinator", us_per_event,
+        f"mttr={_mttr_of(co):.4f};events={co['n_events']}"))
+    c = res["closure"]
+    rows.append((
+        "chaos_closure", 0.0,
+        f"measured={c['measured_ratio']};analytic={c['analytic_ratio']};"
+        f"rel_err={c['rel_err']};dropped={len(c['dropped'])}"))
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="schedule/workload/init RNG seed")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI sizing (same taxonomy coverage)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="directory for the train campaign's checkpoint "
+                         "restore drill (skipped when omitted)")
+    args = ap.parse_args(argv)
+    out = run_campaign(args.seed, smoke=args.smoke,
+                       ckpt_dir=args.ckpt_dir)
+    print(json.dumps(out, indent=2, default=str))
+    if not out["invariants"]["ok"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

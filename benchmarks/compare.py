@@ -38,11 +38,11 @@ def load(path: str) -> dict:
     return snap
 
 
-def _goodput(row: dict):
-    """Parse a ``goodput=<float>`` key out of a bench row's derived
-    string (the traffic benches carry virtual-clock goodput there)."""
+def _derived_float(row: dict, key: str):
+    """Parse a ``<key>=<float>`` entry out of a bench row's derived
+    string."""
     for part in str(row.get("derived", "")).split(";"):
-        if part.startswith("goodput="):
+        if part.startswith(key + "="):
             try:
                 return float(part.split("=", 1)[1])
             except ValueError:
@@ -50,9 +50,20 @@ def _goodput(row: dict):
     return None
 
 
+def _goodput(row: dict):
+    """The traffic benches carry virtual-clock goodput in derived."""
+    return _derived_float(row, "goodput")
+
+
+def _mttr(row: dict):
+    """The chaos benches carry mean per-event recovery time in
+    derived."""
+    return _derived_float(row, "mttr")
+
+
 def compare(old: dict, new: dict, *, fail_ratio: float = 2.0,
             warn_ratio: float = 1.25, min_us: float = 1.0,
-            goodput_drop: float = 0.2):
+            goodput_drop: float = 0.2, mttr_grow: float = 1.0):
     """Yield (verdict, name, ratio, old_us, new_us) per bench.
 
     ``ratio`` is calibration-normalized new/old time (>1 = slower); None
@@ -60,7 +71,12 @@ def compare(old: dict, new: dict, *, fail_ratio: float = 2.0,
     ``derived`` carries ``goodput=`` in both snapshots additionally get
     a GOODPUT row when the new goodput dropped more than
     ``goodput_drop`` — goodput is virtual-clock (deterministic per
-    seed), so it is compared raw, with no calibration scaling.
+    seed), so it is compared raw, with no calibration scaling.  Benches
+    carrying ``mttr=`` in both snapshots get an MTTR row when the new
+    mean recovery time grew more than ``mttr_grow`` (fractional; the
+    chaos MTTRs are virtual/step-clock or retry-budget-bounded, so the
+    generous default absorbs runner jitter while still catching a
+    recovery path that stopped converging).
     """
     ocal, ncal = old["calibration_us"], new["calibration_us"]
     for name, orow in sorted(old["benches"].items()):
@@ -73,6 +89,9 @@ def compare(old: dict, new: dict, *, fail_ratio: float = 2.0,
         og, ng = _goodput(orow), _goodput(nrow)
         if og and ng is not None and ng < og * (1.0 - goodput_drop):
             yield "GOODPUT", name, ng / og, og, ng
+        om, nm = _mttr(orow), _mttr(nrow)
+        if om and nm is not None and nm > om * (1.0 + mttr_grow):
+            yield "MTTR", name, nm / om, om, nm
         if ous < min_us:
             yield "SKIP", name, None, ous, nus
             continue
@@ -95,6 +114,9 @@ def main(argv=None) -> int:
     ap.add_argument("--goodput-drop", type=float, default=0.2,
                     help="max tolerated fractional goodput drop for "
                          "rows carrying goodput= in derived")
+    ap.add_argument("--mttr-grow", type=float, default=1.0,
+                    help="max tolerated fractional MTTR growth for "
+                         "rows carrying mttr= in derived")
     args = ap.parse_args(argv)
 
     old, new = load(args.old), load(args.new)
@@ -105,27 +127,28 @@ def main(argv=None) -> int:
     for verdict, name, ratio, ous, nus in compare(
             old, new, fail_ratio=args.fail_ratio,
             warn_ratio=args.warn_ratio, min_us=args.min_us,
-            goodput_drop=args.goodput_drop):
+            goodput_drop=args.goodput_drop, mttr_grow=args.mttr_grow):
         counts[verdict] = counts.get(verdict, 0) + 1
         if verdict in ("ok", "SKIP"):
             # SKIP rows are the analytic (0-us derived-metric) benches;
             # listing all of them would drown the actionable lines
             continue
         rtxt = f"{ratio:.2f}x" if ratio is not None else "-"
-        otxt = f"{ous:.1f}" if ous is not None else "-"
-        ntxt = f"{nus:.1f}" if nus is not None else "-"
-        unit = "tok/s" if verdict == "GOODPUT" else "us"
+        unit = {"GOODPUT": "tok/s", "MTTR": "s"}.get(verdict, "us")
+        prec = 4 if verdict == "MTTR" else 1
+        otxt = f"{ous:.{prec}f}" if ous is not None else "-"
+        ntxt = f"{nus:.{prec}f}" if nus is not None else "-"
         print(f"{verdict:8s} {name:40s} {rtxt:>8s}  "
               f"old {otxt}{unit}  new {ntxt}{unit}")
     total = sum(counts.values())
     print(f"# {total} benches: " + ", ".join(
         f"{v} {verdict.lower()}" for verdict, v in sorted(counts.items())))
     bad = (counts.get("FAIL", 0) + counts.get("MISSING", 0)
-           + counts.get("GOODPUT", 0))
+           + counts.get("GOODPUT", 0) + counts.get("MTTR", 0))
     if bad:
         print(f"# REGRESSION: {bad} bench(es) failed the "
-              f">{args.fail_ratio:g}x gate (goodput drop, or went "
-              f"missing)", file=sys.stderr)
+              f">{args.fail_ratio:g}x gate (goodput drop, MTTR growth, "
+              f"or went missing)", file=sys.stderr)
         return 1
     return 0
 

@@ -34,6 +34,7 @@ MODULES = [
     "benchmarks.step_bench",         # staged train/serve under faults
     "benchmarks.serve_bench",        # continuous vs fixed-batch serving
     "benchmarks.traffic_bench",      # open-loop goodput/tail under faults
+    "benchmarks.chaos_bench",        # randomized fault-schedule soak
     "benchmarks.fleet_bench",        # MC fault trace through the fleet
     "benchmarks.roofline",           # dry-run roofline summary
 ]

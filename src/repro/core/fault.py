@@ -20,6 +20,7 @@ Injection: ``FaultInjector`` corrupts a stage's HW path deterministically
 from __future__ import annotations
 
 import logging
+import time
 from dataclasses import dataclass
 from typing import (Callable, Dict, FrozenSet, Iterable, List, Mapping,
                     Optional, Sequence, Tuple)
@@ -37,6 +38,14 @@ log = logging.getLogger(__name__)
 
 OK = "ok"
 FAULT = "fault"
+
+# Probation verdicts (FaultClassifier).  A detection enters *probation*:
+# the stage's canary is re-executed on the same replica under exponential
+# backoff, and the verdict decides which ladder the runtime walks —
+# ``transient_recovered`` restores the HW route, ``persistent`` proceeds
+# HW -> DEGRADED -> SW as before.
+TRANSIENT_RECOVERED = "transient_recovered"
+PERSISTENT = "persistent"
 
 # Errors a detector may legitimately *interpret as a fault* when a stage's
 # HW path raises them (numeric/shape breakage of the kind a defective
@@ -126,6 +135,25 @@ class FaultState:
         self.log.append(e)
         return e
 
+    def clear(self, stage: str, replica: int = 0,
+              kind: str = TRANSIENT_RECOVERED, step: int = 0) -> dict:
+        """Undo exactly one ``mark`` on (stage, replica): the probation
+        verdict came back transient, so the fault count steps back down one
+        rung and — when that was the only outstanding fault — the
+        quarantine lifts.  Logged with the same deterministic stamp so the
+        recovery replays identically on every host."""
+        key = (stage, replica)
+        n = self.count(stage, replica)
+        if n <= 1:
+            self._counts.pop(key, None)
+            self._bad.pop(key, None)
+        else:
+            self._counts[key] = n - 1
+        entry = {"stage": stage, "replica": replica, "kind": kind,
+                 **self._stamp(step)}
+        self.log.append(entry)
+        return entry
+
     def is_faulty(self, stage: str, replica: int = 0) -> bool:
         return self._bad.get((stage, replica)) == FAULT
 
@@ -167,6 +195,132 @@ class FaultState:
                 seen.add(k)
                 out.append(e)
         return out
+
+
+# ------------------------------------------------------------- probation
+@dataclass(frozen=True)
+class ProbationPolicy:
+    """Retry budget for probation re-execution (RedMulE-FT style
+    re-execution-on-demand: the cheap recovery rung *before* any capacity
+    is surrendered).  ``retries`` canary re-runs, exponentially backed off
+    from ``backoff_base_s`` by ``backoff_factor`` and capped at
+    ``max_backoff_s``.  The default base of 0 keeps tests and virtual-clock
+    runs wall-time free; production sets a real base."""
+
+    retries: int = 3
+    backoff_base_s: float = 0.0
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 1.0
+
+    def __post_init__(self):
+        if self.retries < 1:
+            raise ValueError(f"retries must be >= 1, got {self.retries}")
+        if self.backoff_base_s < 0 or self.max_backoff_s < 0:
+            raise ValueError("backoff must be >= 0")
+        if self.backoff_factor < 1.0:
+            raise ValueError(f"backoff_factor must be >= 1, got "
+                             f"{self.backoff_factor}")
+
+    def backoff_schedule(self) -> Tuple[float, ...]:
+        """Seconds to wait before each retry attempt (deterministic)."""
+        return tuple(min(self.max_backoff_s,
+                         self.backoff_base_s * self.backoff_factor ** i)
+                     for i in range(self.retries))
+
+
+@dataclass(frozen=True)
+class ProbationResult:
+    """Outcome of one probation: ``transient`` when the canary went clean
+    within the retry budget (at re-run ``attempts``), else persistent.
+    ``backoff_s`` is the total back-off actually scheduled."""
+
+    stage: str
+    replica: int
+    transient: bool
+    attempts: int
+    backoff_s: float
+
+    @property
+    def verdict(self) -> str:
+        return TRANSIENT_RECOVERED if self.transient else PERSISTENT
+
+
+class FaultClassifier:
+    """Transient-vs-persistent probation over a detection (paper §III-A
+    splits the fault model; arxiv 1806.09679 finds most datapath upsets
+    transient, so acting on the split recovers real capacity).
+
+    On a detection, the stage's canary is re-executed on the same replica
+    up to ``policy.retries`` times with exponential backoff: a clean canary
+    means the upset did not persist — the caller restores the HW route and
+    the log records ``transient_recovered``; all-red means a real defect —
+    the caller walks the existing HW -> DEGRADED -> SW ladder.
+
+    ``sleep`` is injectable (tests pass a recorder; the default zero-base
+    policy never waits, so virtual-clock runs stay wall-time free)."""
+
+    def __init__(self, checker: "CanaryChecker",
+                 policy: Optional[ProbationPolicy] = None, *,
+                 sleep: Optional[Callable[[float], None]] = None):
+        self.checker = checker
+        self.policy = policy or ProbationPolicy()
+        self._sleep = sleep if sleep is not None else time.sleep
+
+    def _stage_named(self, name: str) -> Optional[Stage]:
+        for s in self.checker.stages:
+            if s.name == name:
+                return s
+        return None
+
+    def probate(self, probe: Callable[[], bool], *, stage: str,
+                replica: int = 0, step: int = 0,
+                state: Optional[FaultState] = None) -> ProbationResult:
+        """Core retry loop over an arbitrary health probe (True = clean).
+        ``classify`` wraps the stage canary in this; the train runner
+        probes by re-executing the tripped shard directly."""
+        waited = 0.0
+        attempts = 0
+        for backoff in self.policy.backoff_schedule():
+            if backoff > 0:
+                self._sleep(backoff)
+            waited += backoff
+            attempts += 1
+            clean = bool(probe())
+            if state is not None:
+                state.note(stage, replica,
+                           kind="probation_retry", step=step)
+            if clean:
+                res = ProbationResult(stage=stage, replica=replica,
+                                      transient=True, attempts=attempts,
+                                      backoff_s=waited)
+                if state is not None:
+                    state.note(stage, replica,
+                               kind=TRANSIENT_RECOVERED, step=step)
+                return res
+        res = ProbationResult(stage=stage, replica=replica,
+                              transient=False, attempts=attempts,
+                              backoff_s=waited)
+        if state is not None:
+            state.note(stage, replica, kind=PERSISTENT, step=step)
+        return res
+
+    def classify(self, stage_name: str, *, replica: int = 0, step: int = 0,
+                 state: Optional[FaultState] = None) -> ProbationResult:
+        """Probate ``stage_name`` by re-running its canary.  Unknown stages
+        (not in the checker's list) cannot be probed — treated persistent,
+        the safe direction."""
+        s = self._stage_named(stage_name)
+        if s is None:
+            log.warning("probation: no canary stage %r; treating the "
+                        "fault as persistent", stage_name)
+            if state is not None:
+                state.note(stage_name, replica, kind=PERSISTENT, step=step)
+            return ProbationResult(stage=stage_name, replica=replica,
+                                   transient=False, attempts=0,
+                                   backoff_s=0.0)
+        return self.probate(lambda: self.checker.check_stage(s),
+                            stage=stage_name, replica=replica, step=step,
+                            state=state)
 
 
 # ------------------------------------------------------------- injection

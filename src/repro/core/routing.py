@@ -514,6 +514,48 @@ class FleetPlan:
                                            if d != device),
                          fault_counts=counts, stage_faults=sfaults)
 
+    def with_stage_recovery(self, device: int, stage: str, *,
+                            target: str = HW) -> "FleetPlan":
+        """Undo exactly one ``with_stage_fault`` on (device, stage): the
+        probation verdict came back transient, so the detection that walked
+        the ladder steps back up one rung.  At count 0 the stage's route
+        restores to ``target`` (the HW path — the hardware probed clean);
+        with residual faults and a localized lane map it re-lands on
+        ``rung_for(n-1)``.  A device quarantined by that fault returns to
+        service and releases its spare; other devices' and stages' faults
+        are untouched (contrast ``with_recovery``, the full-device repair).
+        """
+        n = self.stage_fault_count(device, stage)
+        if n < 1:
+            raise ValueError(f"device {device} has no fault on stage "
+                             f"{stage!r}; nothing to recover")
+        sf = dict(self.stage_faults)
+        key = (device, stage)
+        if n == 1:
+            sf.pop(key, None)
+        else:
+            sf[key] = n - 1
+        counts = (self.fault_counts[:device]
+                  + (max(0, self.fault_counts[device] - 1),)
+                  + self.fault_counts[device + 1:])
+        if n == 1:
+            route = target
+        elif lanefault.fault_map(stage) is not None:
+            route = lanefault.rung_for(n - 1)
+        else:
+            route = self.plans[device].get(stage, target)
+        plans = self._set_plan(device,
+                               self.plans[device].with_target(stage, route))
+        if device in self.quarantined:
+            return FleetPlan(plans=plans, pool=self.pool.release(device),
+                             quarantined=tuple(d for d in self.quarantined
+                                               if d != device),
+                             fault_counts=counts,
+                             stage_faults=tuple(sorted(sf.items())))
+        return FleetPlan(plans=plans, pool=self.pool,
+                         quarantined=self.quarantined, fault_counts=counts,
+                         stage_faults=tuple(sorted(sf.items())))
+
     # --------------------------------------------------------- validation
     def validate(self, *, registry=None,
                  stages: Optional[Iterable[str]] = None) -> "FleetPlan":

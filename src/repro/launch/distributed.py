@@ -39,6 +39,9 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
+import random
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -46,6 +49,8 @@ from repro.core.routing import FleetPlan
 from repro.launch.mesh import FleetMeshView, _mesh
 from repro.launch.sharding import shard_bounds
 from repro.viscosity.lang import HW, SW
+
+log = logging.getLogger(__name__)
 
 # Event kinds, mirroring the FleetPlan transitions (plus host loss, which
 # expands to one with_host_fault transition over the host's device block).
@@ -352,12 +357,16 @@ class FleetEvent:
         """The event in the FleetServeEngine's tuple dialect."""
         if self.kind == STAGE:
             return (STAGE, self.device, self.stage)
+        if self.kind == RECOVER and self.stage:
+            # Stage-scoped recovery (probation verdict: transient) —
+            # undoes exactly one rung, not the whole device.
+            return (RECOVER, self.device, self.stage)
         return (self.kind, self.device)
 
     @staticmethod
     def from_engine(step: int, origin: int, seq: int, event: Sequence) -> "FleetEvent":
         kind = event[0]
-        stage = event[2] if kind == STAGE else ""
+        stage = event[2] if kind in (STAGE, RECOVER) and len(event) > 2 else ""
         return FleetEvent(
             step=step,
             origin=origin,
@@ -402,6 +411,11 @@ def apply_event(
         if event.kind == DEVICE:
             return plan.with_device_fault(event.device), True
         if event.kind == RECOVER:
+            if event.stage:
+                return (
+                    plan.with_stage_recovery(event.device, event.stage, target=target),
+                    True,
+                )
             return plan.with_recovery(event.device, stage_names, target=target), True
         if topology is None:
             raise ValueError("host events need a HostTopology for the block")
@@ -451,6 +465,52 @@ def fleet_fingerprint(plan: FleetPlan) -> str:
 
 
 # ----------------------------------------------------------- coordinators
+class HostTimeoutError(RuntimeError):
+    """A peer host failed to publish within the bounded retry budget.
+
+    Typed — carrying the missing ``host_id`` — so the fleet layer can
+    convert the silent peer into a ``with_host_fault`` event (survivors
+    re-fold and keep serving) instead of inheriting an opaque hang.
+    """
+
+    def __init__(self, host_id: int, message: Optional[str] = None):
+        super().__init__(message or f"host {host_id} timed out")
+        self.host_id = int(host_id)
+
+
+_CLIENT_ERRORS: Optional[Tuple[type, ...]] = None
+
+
+def coordination_client_errors() -> Tuple[type, ...]:
+    """Error types the coordination-service client raises (timeouts,
+    disconnects, missing keys).  Probed lazily because the taxonomy
+    varies across jaxlibs; ``RuntimeError`` is the floor every known
+    client satisfies.  This is the *only* exception set coordination
+    code may catch broadly — anything outside it is a genuine bug and
+    must propagate."""
+    global _CLIENT_ERRORS
+    if _CLIENT_ERRORS is None:
+        errs: List[type] = [RuntimeError]
+        try:
+            from jax._src.lib import xla_client as _xc
+
+            err = getattr(_xc, "XlaRuntimeError", None)
+            if isinstance(err, type) and issubclass(err, Exception):
+                errs.append(err)
+        except Exception:  # noqa: BLE001 - probing a version-dependent
+            pass  # jax internal; absence is expected
+        try:
+            import jax
+
+            err = getattr(getattr(jax, "errors", None), "JaxRuntimeError", None)
+            if isinstance(err, type) and issubclass(err, Exception):
+                errs.append(err)
+        except Exception:  # noqa: BLE001 - same version probe
+            pass
+        _CLIENT_ERRORS = tuple(dict.fromkeys(errs))
+    return _CLIENT_ERRORS
+
+
 class LocalCoordinator:
     """The trivial single-host transport (exchange = identity)."""
 
@@ -480,6 +540,10 @@ class KVCoordinator:
         *,
         client=None,
         timeout_ms: int = 120_000,
+        attempt_timeout_ms: int = 5_000,
+        max_attempts: int = 6,
+        backoff_base_s: float = 0.05,
+        backoff_factor: float = 2.0,
         namespace: str = "fleet",
     ):
         import jax
@@ -495,40 +559,94 @@ class KVCoordinator:
                     "jax.distributed is not initialized; call "
                     "initialize_runtime() first"
                 )
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
         self._client = client
         self._timeout_ms = timeout_ms
+        self._attempt_timeout_ms = attempt_timeout_ms
+        self._max_attempts = max_attempts
+        self._backoff_base_s = backoff_base_s
+        self._backoff_factor = backoff_factor
         self._namespace = namespace
         self._round = 0
+        self._dead: set = set()
 
-    def exchange(self, payload: str) -> List[str]:
+    def mark_dead(self, host: int) -> None:
+        """Stop waiting on ``host``: the fleet layer calls this after it
+        converted the peer's ``HostTimeoutError`` into a host-fault
+        event.  The dead peer's slot in every later exchange is ``None``
+        (consumers skip it) — the survivors keep lockstep rounds without
+        re-paying the retry budget each step."""
+        self._dead.add(int(host))
+
+    def _get_with_retry(self, key: str, peer: int, round_idx: int) -> str:
+        """Bounded retries with jittered exponential backoff under the
+        overall ``timeout_ms`` deadline.  A peer that never publishes
+        surfaces as a typed ``HostTimeoutError(host_id)`` after at most
+        ``max_attempts`` short gets — not one opaque 120 s block."""
+        deadline = time.monotonic() + self._timeout_ms / 1000.0
+        # Deterministically seeded jitter: distinct per (round, peer,
+        # self) so hosts don't thundering-herd the service in sync.
+        rng = random.Random(round_idx * 1009 + peer * 31 + self.host_id)
+        last: Optional[BaseException] = None
+        attempts = 0
+        for attempt in range(self._max_attempts):
+            remaining_ms = int((deadline - time.monotonic()) * 1000)
+            if remaining_ms <= 0:
+                break
+            attempts += 1
+            budget = min(self._attempt_timeout_ms, remaining_ms)
+            try:
+                return self._client.blocking_key_value_get(f"{key}/{peer}", budget)
+            except coordination_client_errors() as e:
+                last = e
+                if attempt + 1 >= self._max_attempts:
+                    break
+                backoff = min(
+                    self._backoff_base_s * self._backoff_factor**attempt,
+                    max(0.0, deadline - time.monotonic()),
+                )
+                if backoff > 0:
+                    time.sleep(backoff * (0.5 + rng.random()))
+        raise HostTimeoutError(
+            peer,
+            f"host {peer} did not publish round {round_idx} within "
+            f"{attempts} attempt(s) (budget {self._max_attempts} x "
+            f"{self._attempt_timeout_ms} ms, deadline {self._timeout_ms} ms)",
+        ) from last
+
+    def exchange(self, payload: str) -> List[Optional[str]]:
         r = self._round
         self._round += 1
         key = f"{self._namespace}/x{r}"
         self._client.key_value_set(f"{key}/{self.host_id}", payload)
-        out = []
+        out: List[Optional[str]] = []
         for h in range(self.num_hosts):
             if h == self.host_id:
                 out.append(payload)
+            elif h in self._dead:
+                out.append(None)
             else:
-                out.append(
-                    self._client.blocking_key_value_get(
-                        f"{key}/{h}", self._timeout_ms
-                    )
-                )
+                out.append(self._get_with_retry(key, h, r))
         # Garbage-collect this host's key from two rounds back: rounds
         # are lockstep (every host makes the same exchange sequence), so
         # a peer still reading round r-1 has finished r-2 entirely —
         # deleting r-2 can never race a reader.  Without this the
         # coordination service accumulates one key per host per step
-        # for the life of the runtime.
+        # for the life of the runtime.  Cleanup is best-effort, but only
+        # for the *client's* error taxonomy — anything else is a real
+        # bug and propagates.
         if r >= 2 and hasattr(self._client, "key_value_delete"):
             try:
                 self._client.key_value_delete(
                     f"{self._namespace}/x{r - 2}/{self.host_id}"
                 )
-            except Exception:  # noqa: BLE001 - coordination-service cleanup
-                pass  # is best-effort; correctness never depends on it and
-                #      the client's error taxonomy varies across jaxlibs
+            except coordination_client_errors() as e:
+                log.debug(
+                    "coordination-service GC of round %d key failed: %s",
+                    r - 2,
+                    e,
+                )
         return out
 
 
@@ -553,8 +671,16 @@ class EventChannel:
             self._seq += 1
         return stamped
 
-    def _merge_payloads(self, payloads: Sequence[str]) -> Tuple[FleetEvent, ...]:
-        logs = [tuple(FleetEvent.from_wire(w) for w in json.loads(p)) for p in payloads]
+    def _merge_payloads(
+        self, payloads: Sequence[Optional[str]]
+    ) -> Tuple[FleetEvent, ...]:
+        # None slots are peers the coordinator marked dead — their
+        # history is already folded; nothing new can arrive from them.
+        logs = [
+            tuple(FleetEvent.from_wire(w) for w in json.loads(p))
+            for p in payloads
+            if p is not None
+        ]
         merged = merge_event_logs(*logs)
         self.log.extend(merged)
         return merged

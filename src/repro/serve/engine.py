@@ -68,8 +68,8 @@ from repro.core.datacenter import DegradationModel
 from repro.core.fault import FaultState
 from repro.core.oobleck import Dispatcher
 from repro.core.routing import FleetPlan, RoutingPlan
-from repro.launch.distributed import EventChannel, HostTopology, \
-    fleet_fingerprint
+from repro.launch.distributed import EventChannel, HostTimeoutError, \
+    HostTopology, fleet_fingerprint
 from repro.models import build_model
 from repro.train.runner import model_stage_names
 from repro.viscosity import REGISTRY, SW, lanefault
@@ -281,13 +281,15 @@ class ServeEngine(_SlotPool):
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig, *,
                  dispatchers: Optional[Tuple[Dispatcher, Dispatcher]] = None,
-                 template: Optional["ServeEngine"] = None):
+                 template: Optional["ServeEngine"] = None,
+                 classifier=None):
         if scfg.failover not in (RECOMPILE, RESIDENT):
             raise ValueError(f"unknown failover mode {scfg.failover!r}; "
                              f"expected {RECOMPILE!r} or {RESIDENT!r}")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        self.classifier = classifier   # core.fault.FaultClassifier | None
         self.fault_state = FaultState()
         self.stage_names = model_stage_names(cfg)
         if dispatchers is None:
@@ -361,6 +363,28 @@ class ServeEngine(_SlotPool):
             raise ValueError(f"unknown stage {stage!r}; this model's stages:"
                              f" {self.stage_names}")
         self.fault_state.mark(stage, 0, kind="injected")
+
+    def observe_fault(self, stage: str, *, step: int = 0) -> bool:
+        """Route one detection through the probation classifier (when the
+        engine has one).  The stage is marked first — probation must not
+        race new work onto the suspect path — then its canary re-executes
+        under the classifier's backoff budget.  A transient verdict
+        (canary went clean) clears the mark, so the next ``plan()``
+        restores the HW route with zero residual quarantine; persistent
+        keeps the mark and the degradation ladder walks exactly as an
+        ``inject_fault`` would.  Returns True when transient."""
+        if stage not in self.stage_names:
+            raise ValueError(f"unknown stage {stage!r}; this model's stages:"
+                             f" {self.stage_names}")
+        self.fault_state.mark(stage, 0, kind="detected", step=step)
+        if self.classifier is None:
+            return False
+        res = self.classifier.classify(stage, replica=0, step=step,
+                                       state=self.fault_state)
+        if res.transient:
+            self.fault_state.clear(stage, 0, step=step)
+            return True
+        return False
 
     # ------------------------------------------------------------ builds
     def _build_prefill(self, plan: RoutingPlan):
@@ -622,8 +646,8 @@ def merge_completions(coordinator, completions: Dict[int, Completion]
     payloads = coordinator.exchange(json.dumps(local))
     merged = dict(completions)
     for host, payload in enumerate(payloads):
-        if host == coordinator.host_id:
-            continue
+        if host == coordinator.host_id or payload is None:
+            continue             # None: a peer marked dead mid-run
         for rid, toks, plen, arr, astep, fstep, lat, dev, qw, ttft, \
                 dl, dmet, exp in json.loads(payload):
             merged[rid] = Completion(
@@ -652,13 +676,18 @@ class FleetServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 fcfg: FleetConfig, *, coordinator=None):
+                 fcfg: FleetConfig, *, coordinator=None, classifier=None,
+                 watchdog=None):
         if fcfg.n_devices < 1:
             raise ValueError(f"fleet needs >= 1 device, got {fcfg.n_devices}")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.fcfg = fcfg
+        self.classifier = classifier   # core.fault.FaultClassifier | None
+        self.watchdog = watchdog       # core.fault.StragglerWatchdog | None
+        self._suspected: set = set()   # devices under watchdog suspicion
+        self._pending_suspects: List[Tuple] = []   # resolve next step
         self.topology = fcfg.topology
         if self.topology is not None and \
                 self.topology.n_devices != fcfg.n_devices:
@@ -741,14 +770,26 @@ class FleetServeEngine:
                     self.topology.devices_of(device))
             else:                    # recover
                 spare = self.fleet.pool.spare_for(device)
-                self.fleet = self.fleet.with_recovery(
-                    device, self.stage_names, target=self.scfg.hw_route)
-                self.workers[device].fault_state = FaultState()  # fresh hw
-                if spare is not None:  # spare returns to the idle pool; its
-                    drained = self.workers[spare].drain()  # slots re-admit
+                stage = event[2] if len(event) > 2 else ""
+                if stage:
+                    # Stage-scoped (probation verdict: transient) — undo
+                    # exactly one rung; other faults on the device stay.
+                    self.fleet = self.fleet.with_stage_recovery(
+                        device, stage, target=self.scfg.hw_route)
+                    self.workers[device].fault_state.clear(stage, 0,
+                                                           step=step)
+                else:                # full repair: fresh hardware
+                    self.fleet = self.fleet.with_recovery(
+                        device, self.stage_names, target=self.scfg.hw_route)
+                    self.workers[device].fault_state = FaultState()
+                self._suspected.discard(device)
+                if spare is not None and \
+                        device not in self.fleet.quarantined:
+                    # spare returns to the idle pool; its slots re-admit
+                    drained = self.workers[spare].drain()  # on the
                     self.event_log.append({"step": step, "event": event,
                                            "drained": len(drained)})
-                    self._sync_capacity()  # on the recovered device
+                    self._sync_capacity()  # recovered device
                     return drained
         except ValueError:
             if strict:
@@ -764,6 +805,58 @@ class FleetServeEngine:
                                "drained": len(drained)})
         self._sync_capacity()
         return drained
+
+    # ---------------------------------------------- probation & watchdog
+    def _probe(self, device: int, stage: str, step: int) -> List[Tuple]:
+        """Probate one detection into the event tuples every host folds.
+        Transient -> the ("stage", d, s) / ("recover", d, s) pair: the
+        rung down AND back up both ride the ordered log, so probation
+        state agrees fleet-wide.  Persistent -> the fault alone, and the
+        ladder walks exactly as before.  Without a classifier every
+        detection is persistent (the pre-probation behavior)."""
+        if self.classifier is None:
+            return [("stage", device, stage)]
+        res = self.classifier.classify(
+            stage, replica=device, step=step,
+            state=self.workers[device].fault_state)
+        if res.transient:
+            return [("stage", device, stage), ("recover", device, stage)]
+        return [("stage", device, stage)]
+
+    def _resolve_suspect(self, device: int, step: int) -> List[Tuple]:
+        """A watchdog suspicion names a device, not a stage: canary every
+        stage there and probate the failing ones.  An all-clean suspicion
+        (transient straggle — contention, GC pause) clears with a log
+        entry and no routing change."""
+        out: List[Tuple] = []
+        if self.classifier is not None:
+            for s in self.classifier.checker.stages:
+                if not self.classifier.checker.check_stage(s):
+                    out.extend(self._probe(device, s.name, step))
+        if not out:
+            self.workers[device].fault_state.note(
+                "<watchdog>", device, kind="suspected_cleared", step=step)
+        self._suspected.discard(device)
+        return out
+
+    def _watchdog_tick(self, device: int, tick: Mapping, step: int):
+        """Feed one real decode tick to the straggler watchdog; newly
+        flagged devices get a ``suspected`` fault-log entry and a pending
+        suspect event the next session step resolves through the
+        classifier."""
+        wd = self.watchdog
+        if wd is None or not tick["active"]:
+            return
+        if self.workers[device].placeholder:
+            return                   # shadows don't decode: dt is fake
+        wd.record(device, tick["dt"])
+        for d in wd.stragglers():
+            if d in self._suspected:
+                continue
+            self._suspected.add(d)
+            self.workers[d].fault_state.note(
+                "<watchdog>", d, kind="suspected", step=step)
+            self._pending_suspects.append(("suspect", d))
 
     # convenience wrappers (usable between serve() calls or via events)
     def inject_stage_fault(self, device: int, stage: str):
@@ -1000,19 +1093,61 @@ class FleetSession(ServeSession):
                 return True
         return False
 
+    def _exchange_guarded(self, exchange_fn, local_events: List[Tuple]):
+        """Run one channel exchange, converting a peer's typed
+        ``HostTimeoutError`` into a ``("host", host_id)`` event: the dead
+        peer is marked on the coordinator (its future payload slots turn
+        ``None``) and the exchange retries with the host-fault appended,
+        so the survivors re-fold and keep serving instead of inheriting
+        the hang.  Deterministic across survivors because the KV store is
+        shared — a silent peer is silent for every reader.  Coordinators
+        without ``mark_dead`` (or a fleet with no surviving peer) get the
+        error raised through."""
+        eng = self.engine
+        for _ in range(max(1, eng.coordinator.num_hosts)):
+            try:
+                return exchange_fn()
+            except HostTimeoutError as exc:
+                if not hasattr(eng.coordinator, "mark_dead"):
+                    raise
+                eng.coordinator.mark_dead(exc.host_id)
+                local_events.append(("host", exc.host_id))
+                self.stats.setdefault("host_timeouts", []).append(
+                    {"step": self.step_count, "host": exc.host_id})
+        raise HostTimeoutError(
+            eng.coordinator.host_id,
+            "every peer exhausted its retry budget; no fleet left to "
+            "agree with")
+
     def step(self, events: Sequence[Tuple] = ()) -> Dict[str, Any]:
         """One fleet step: fold fault events, drain/re-queue, admit
         across the serving devices' pools, one decode tick per device."""
         eng, step = self.engine, self.step_count
         s = self.stats
         step_tokens = 0
-        step_events = list(events)
+        # ("suspect", device[, stage]) tuples — watchdog suspicions from
+        # the previous tick plus any caller-injected ones — resolve
+        # through the probation classifier BEFORE the exchange: only the
+        # verdict (the fault / fault+recover pair) enters the shared log.
+        pend, eng._pending_suspects = eng._pending_suspects, []
+        step_events: List[Tuple] = []
+        for ev in list(pend) + list(events):
+            if ev and ev[0] == "suspect":
+                d = int(ev[1])
+                if len(ev) > 2 and ev[2]:
+                    step_events.extend(eng._probe(d, ev[2], step))
+                else:
+                    step_events.extend(eng._resolve_suspect(d, step))
+            else:
+                step_events.append(tuple(ev))
         if eng.channel is not None:
             # one shared ordered log: publish the locally observed
             # slice, apply the canonical merge — every host folds the
             # same transitions in the same order
-            step_events = [e.engine_tuple() for e in
-                           eng.channel.exchange(step, step_events)]
+            local = list(step_events)
+            merged = self._exchange_guarded(
+                lambda: eng.channel.exchange(step, list(local)), local)
+            step_events = [e.engine_tuple() for e in merged]
         drained: List[Request] = []
         for ev in step_events:
             drained.extend(eng._apply(ev, step,
@@ -1045,6 +1180,7 @@ class FleetSession(ServeSession):
         occupancy = 0
         for d in serving:
             tick = eng.workers[d].decode_tick(step, self._completions)
+            eng._watchdog_tick(d, tick, step)
             occupancy += tick["active"]
             step_tokens += tick["tokens"]
             s["per_device_tokens"][d] += tick["tokens"]
@@ -1072,8 +1208,16 @@ class FleetSession(ServeSession):
         eng, s = self.engine, self.stats
         late_events = dict(late_events or {})
         if eng.channel is not None:
-            late = eng.channel.exchange_many(
-                {k: list(v) for k, v in late_events.items()})
+            extra: List[Tuple] = []
+
+            def _do():
+                ev_map = {k: list(v) for k, v in late_events.items()}
+                if extra:
+                    ev_map[self.step_count] = (
+                        list(ev_map.get(self.step_count, ())) + list(extra))
+                return eng.channel.exchange_many(ev_map)
+
+            late = self._exchange_guarded(_do, extra)
             for e in late:
                 eng._apply(e.engine_tuple(), step=e.step, strict=False)
             s["late_events"] = len(late)

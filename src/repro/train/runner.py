@@ -28,13 +28,15 @@ import jax.numpy as jnp
 from repro import optim
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig
-from repro.core.fault import (CanaryChecker, FaultSignature, FaultState,
+from repro.core.fault import (CanaryChecker, FaultClassifier,
+                              FaultSignature, FaultState, ProbationPolicy,
                               StepGuard, StragglerWatchdog)
 from repro.core.oobleck import Dispatcher
 from repro.core.routing import FleetPlan, RoutingPlan
 from repro.core.stage import Stage
 from repro.data.pipeline import SyntheticLM
-from repro.launch.distributed import FleetEvent, HostTopology, HostView
+from repro.launch.distributed import (FleetEvent, HostTopology, HostView,
+                                      fleet_fingerprint)
 from repro.launch.sharding import shard_bounds
 from repro.models import build_model
 from repro.viscosity import INTERPRET, REGISTRY, SW, lanefault
@@ -98,6 +100,18 @@ class TrainConfig:
     compression: bool = False      # int8 EF gradient compression
     hw_route: str = SW             # production: HW; CPU tests: SW/INTERPRET
     seed: int = 0
+    # Probation (transient-vs-persistent classification): a detection
+    # re-executes under backoff before any capacity is surrendered.
+    # 0 retries = disabled (every detection is persistent, the
+    # pre-probation behavior).
+    probation_retries: int = 0
+    probation_backoff_s: float = 0.0
+
+    def probation_policy(self) -> Optional[ProbationPolicy]:
+        if self.probation_retries <= 0:
+            return None
+        return ProbationPolicy(retries=self.probation_retries,
+                               backoff_base_s=self.probation_backoff_s)
 
 
 class TrainRunner:
@@ -217,7 +231,19 @@ class TrainRunner:
                 chk = CanaryChecker(canary_stages(self.cfg),
                                     route_hw=tcfg.hw_route,
                                     localize=tcfg.canary_localize)
-                chk.sweep(self.fault_state, step=step_i)
+                found = chk.sweep(self.fault_state, step=step_i)
+                policy = tcfg.probation_policy()
+                if found and policy is not None:
+                    # Probation: re-canary each detection under backoff.
+                    # Transient (clean re-run) clears the quarantine — the
+                    # next plan() restores the HW route; persistent walks
+                    # the ladder exactly as before.
+                    clf = FaultClassifier(chk, policy)
+                    for name in found:
+                        res = clf.classify(name, step=step_i,
+                                           state=self.fault_state)
+                        if res.transient:
+                            self.fault_state.clear(name, step=step_i)
             if self.ckpt and (step_i + 1) % tcfg.ckpt_every == 0:
                 self.ckpt.save_async(step_i + 1,
                                      {"params": params, "opt": opt_state},
@@ -282,6 +308,20 @@ class FleetTrainRunner:
         # Ordered transition log (the multi-host runtime replays this):
         # every quarantine/migration the runner performs is one event.
         self.fleet_log: List[FleetEvent] = []
+        # Probation bookkeeping rides the same logical-stamp log dialect
+        # as the single-device runner.
+        self.fault_state = FaultState()
+        self.classifier: Optional[FaultClassifier] = None
+        policy = tcfg.probation_policy()
+        if policy is not None:
+            self.classifier = FaultClassifier(
+                CanaryChecker(canary_stages(cfg), route_hw=tcfg.hw_route),
+                policy)
+        # Fleet-owned checkpoints: checksummed async saves on the
+        # ckpt_every cadence; host-fault recovery restores the latest
+        # onto the survivor mesh (restore-then-continue).
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
         self._update = jax.jit(
             lambda grads, opt_state, params: optim.update(
                 self.opt_cfg, grads, opt_state, params))
@@ -367,31 +407,87 @@ class FleetTrainRunner:
         avg = jax.tree_util.tree_map(lambda t: t / n_rows, total)
         return avg, {"loss": sum(losses) / n_rows}, None
 
+    def _probe_shard(self, params, batch, device: int,
+                     poison_device: Optional[int]) -> bool:
+        """Probation probe: re-execute just ``device``'s shard and guard
+        the result (RedMulE-FT re-execution-on-demand).  True = clean."""
+        B = batch["tokens"].shape[0]
+        bounds = shard_bounds(B, self.fleet.device_mask())
+        lo, hi = bounds.get(device, (0, 0))
+        if hi == lo:
+            return True
+        shard = {k: v[lo:hi] for k, v in batch.items()}
+        fn = self.dispatcher.get(self.fleet.plan_for(device))
+        grads, loss, _metrics = fn(params, shard)
+        if device == poison_device:
+            loss = loss * jnp.nan
+        return StepGuard.ok({"loss": loss, "grads": grads})
+
+    def _restore_latest(self, params, opt_state, step_i: int):
+        """Host-fault recovery: restore the latest checksummed checkpoint
+        onto whatever mesh survives (restore is elastic — params are
+        replicated, so the shard re-fold is just shard_bounds following
+        the new mask).  Returns (params, opt_state, resume_step)."""
+        self.ckpt.wait()
+        s = self.ckpt.latest_step()
+        like = {"params": jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+            "opt": jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt_state)}
+        restored = self.ckpt.restore(s, like)
+        self.fault_state.note("<ckpt>", kind="checkpoint_restored",
+                              step=step_i)
+        return restored["params"], restored["opt"], s
+
     def run(self, params, opt_state, *, steps: Optional[int] = None,
             poison: Optional[Mapping[int, int]] = None,
+            transient: Optional[Mapping[int, int]] = None,
             host_loss: Optional[Mapping[int, int]] = None):
         """``poison[step] = device`` injects a non-finite shard loss at
         that step (the detect -> quarantine -> migrate loop, test-drivable
-        without real broken silicon).  ``host_loss[step] = host`` drops a
-        whole host just before that step: its device block quarantines in
-        one transition and the surviving hosts' shards absorb the batch
-        (the mesh re-fold is automatic — shard_bounds follows the mask).
+        without real broken silicon).  ``transient[step] = device`` is the
+        single-upset variant: it poisons only the *first* execution of
+        that step, so with probation enabled (``TrainConfig
+        .probation_retries > 0``) the re-executed shard comes back clean
+        and the fleet keeps its capacity — logged ``transient_recovered``,
+        zero quarantines.  ``host_loss[step] = host`` drops a whole host
+        just before that step: its device block quarantines in one
+        transition and the surviving hosts' shards absorb the batch (the
+        mesh re-fold is automatic — shard_bounds follows the mask); with
+        a CheckpointManager attached, the latest checkpoint restores onto
+        the survivor mesh first (restore-then-continue).
         """
         steps = steps if steps is not None else self.tcfg.steps
         poison = dict(poison or {})
+        transient = dict(transient or {})
         host_loss = dict(host_loss or {})
         step_i = 0
         while step_i < steps:
             if step_i in host_loss:
                 self.inject_host_fault(host_loss.pop(step_i), step=step_i)
+                if self.ckpt and self.ckpt.steps():
+                    params, opt_state, step_i = self._restore_latest(
+                        params, opt_state, step_i)
+                    continue
             batch = self.data.device_batch(step_i)
             t0 = time.perf_counter()
-            grads, metrics, tripped = self._shard_step(
-                params, batch, poison.get(step_i))
+            pd = poison.get(step_i)
+            if pd is None and step_i in transient:
+                pd = transient.pop(step_i)   # upset hits one execution only
+            grads, metrics, tripped = self._shard_step(params, batch, pd)
             if tripped is not None:
-                # detect -> quarantine; migrate-to-spare when the pool has
-                # one, else the survivors absorb the slice; re-run.
+                # detect -> probate -> quarantine-or-recover; a transient
+                # verdict re-runs the step with no capacity surrendered,
+                # persistent migrates to a spare / reroutes the survivors.
                 self.guard_trips += 1
+                if self.classifier is not None:
+                    res = self.classifier.probate(
+                        lambda: self._probe_shard(params, batch, tripped,
+                                                  poison.get(step_i)),
+                        stage="<step>", replica=tripped, step=step_i,
+                        state=self.fault_state)
+                    if res.transient:
+                        continue
                 poison.pop(step_i, None)     # the bad device is now gone
                 self.fleet = self.fleet.with_device_fault(tripped)
                 self._log_event(step_i, "device", tripped)
@@ -407,4 +503,11 @@ class FleetTrainRunner:
                 row["hosts_serving"] = len(self.host_view().hosts_serving())
             self.history.append(row)
             step_i += 1
+            if self.ckpt and step_i % self.tcfg.ckpt_every == 0:
+                self.ckpt.save_async(
+                    step_i, {"params": params, "opt": opt_state},
+                    extra={"data_step": step_i,
+                           "fingerprint": fleet_fingerprint(self.fleet)})
+        if self.ckpt:
+            self.ckpt.wait()
         return params, opt_state
