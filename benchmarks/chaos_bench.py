@@ -28,10 +28,11 @@ import json
 import time
 
 from repro.chaos.campaign import run_campaign
+from repro.obs import report as obs_report
 
 
-def _mttr_of(section) -> float:
-    mt = section.get("mttr_summary") or {}
+def _mttr_of(snap, section: str) -> float:
+    mt = obs_report.mttr_summary(snap, section=section) or {}
     return float(mt.get("mean_s") or 0.0)
 
 
@@ -41,33 +42,40 @@ def run(seed: int = 0):
     ``us_per_call`` is wall time per injected fault event (the soak is
     dominated by engine steps between events); ``derived`` carries the
     deterministic campaign metrics — mean MTTR, event count, and the
-    survival/closure evidence compare.py's gates watch."""
+    survival/closure evidence compare.py's gates watch — all read back
+    from the campaign's telemetry snapshot (``obs.report``), not from
+    the harnesses' private counters."""
     t0 = time.perf_counter()
     res = run_campaign(seed, smoke=True, raise_on_failure=True)
     wall = time.perf_counter() - t0
+    snap = res["telemetry"]["metrics"]
     us_per_event = 1e6 * wall / max(res["events_total"], 1)
     rows = []
     for mode, sec in sorted(res["serve"].items()):
-        t = sec["traffic"]
+        g = obs_report.goodput_summary(snap, section=f"serve_{mode}")
         rows.append((
             f"chaos_serve_{mode}", us_per_event,
-            f"mttr={_mttr_of(sec):.4f};events={sec['n_events']};"
-            f"completed={t['completed']}/{t['requests']};"
-            f"expired={t['expired']}"))
+            f"mttr={_mttr_of(snap, f'serve_{mode}'):.4f};"
+            f"events={sec['n_events']};"
+            f"completed={g['completed']}/{sec['traffic']['requests']};"
+            f"expired={g['expired']}"))
     tr = res["train"]
     rows.append((
         "chaos_train", us_per_event,
-        f"mttr={_mttr_of(tr):.4f};events={tr['n_events']};"
+        f"mttr={_mttr_of(snap, 'train'):.4f};events={tr['n_events']};"
         f"steps={tr['steps']};trips={tr['guard_trips']}"))
     co = res["coordinator"]
     rows.append((
         "chaos_coordinator", us_per_event,
-        f"mttr={_mttr_of(co):.4f};events={co['n_events']}"))
-    c = res["closure"]
+        f"mttr={_mttr_of(snap, 'coordinator'):.4f};"
+        f"events={co['n_events']}"))
+    c = obs_report.closure(res["telemetry"]["metrics"]) or {}
     rows.append((
         "chaos_closure", 0.0,
-        f"measured={c['measured_ratio']};analytic={c['analytic_ratio']};"
-        f"rel_err={c['rel_err']};dropped={len(c['dropped'])}"))
+        f"measured={c.get('measured_ratio')};"
+        f"analytic={c.get('analytic_ratio')};"
+        f"rel_err={c.get('rel_err')};"
+        f"dropped={len(res['closure']['dropped'])}"))
     return rows
 
 
@@ -81,9 +89,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None,
                     help="directory for the train campaign's checkpoint "
                          "restore drill (skipped when omitted)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the campaign's metrics+trace snapshot "
+                         "here (readable by python -m repro.obs.report)")
     args = ap.parse_args(argv)
     out = run_campaign(args.seed, smoke=args.smoke,
                        ckpt_dir=args.ckpt_dir)
+    telemetry = out.pop("telemetry")
+    if args.telemetry:
+        with open(args.telemetry, "w") as f:
+            json.dump(telemetry, f, sort_keys=True,
+                      separators=(",", ":"))
     print(json.dumps(out, indent=2, default=str))
     if not out["invariants"]["ok"]:
         raise SystemExit(1)

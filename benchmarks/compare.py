@@ -104,10 +104,43 @@ def compare(old: dict, new: dict, *, fail_ratio: float = 2.0,
             yield "NEW", name, None, None, float(nrow["us_per_call"])
 
 
+def check_families(expected_path: str, telemetry_path: str) -> int:
+    """Telemetry coverage gate: every metric family listed in
+    ``expected_path`` (a JSON array of names) must be present in the
+    telemetry snapshot — a family that silently disappears is an
+    instrumentation regression, exactly like a vanished bench row."""
+    with open(expected_path) as f:
+        expected = json.load(f)
+    if not isinstance(expected, list):
+        raise SystemExit(f"{expected_path}: expected a JSON array of "
+                         f"family names")
+    with open(telemetry_path) as f:
+        doc = json.load(f)
+    snap = doc.get("metrics", doc)
+    have = {fam.get("name") for fam in snap.get("families", [])}
+    missing = sorted(set(expected) - have)
+    print(f"# telemetry families: {len(have)} present, "
+          f"{len(expected)} expected")
+    for name in missing:
+        print(f"MISSING  {name}")
+    if missing:
+        print(f"# REGRESSION: {len(missing)} metric family(ies) missing "
+              f"from {telemetry_path}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("old", help="committed baseline snapshot (BENCH_<n>.json)")
-    ap.add_argument("new", help="freshly emitted snapshot")
+    ap.add_argument("old", help="committed baseline snapshot "
+                    "(BENCH_<n>.json), or the telemetry snapshot when "
+                    "--families is given")
+    ap.add_argument("new", nargs="?", default=None,
+                    help="freshly emitted snapshot")
+    ap.add_argument("--families", default=None, metavar="EXPECTED_JSON",
+                    help="telemetry mode: check that the snapshot "
+                         "(positional OLD) contains every metric family "
+                         "named in EXPECTED_JSON; exit 1 on any missing")
     ap.add_argument("--fail-ratio", type=float, default=2.0)
     ap.add_argument("--warn-ratio", type=float, default=1.25)
     ap.add_argument("--min-us", type=float, default=1.0)
@@ -118,6 +151,11 @@ def main(argv=None) -> int:
                     help="max tolerated fractional MTTR growth for "
                          "rows carrying mttr= in derived")
     args = ap.parse_args(argv)
+
+    if args.families is not None:
+        return check_families(args.families, args.old)
+    if args.new is None:
+        ap.error("NEW snapshot required (or pass --families)")
 
     old, new = load(args.old), load(args.new)
     scale = new["calibration_us"] / old["calibration_us"]

@@ -34,6 +34,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.datacenter import DegradationModel
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import report as obs_report
 from repro.serve import (BLOCK, RECOMPILE, RESIDENT, Diurnal, FlashCrowd,
                          FleetConfig, FleetServeEngine, Frontend,
                          FrontendConfig, LengthModel, Poisson, ServeConfig)
@@ -83,34 +85,41 @@ def _engine(cfg, params, failover):
     return FleetServeEngine(cfg, params, scfg, fcfg)
 
 
-def _run_one(eng, reqs, fault_step):
+def _run_one(eng, reqs, fault_step, *, section):
     """One frontend run; fault_step=None keeps the fleet healthy.
     Recovers the fleet afterwards so the engine (and its compile caches)
-    is reusable across scenarios."""
+    is reusable across scenarios.  Goodput/throughput/counts are read
+    back from the telemetry the run recorded under ``section`` — the
+    snapshot, not the frontend's private stats dict, is the source of
+    truth (the two are bit-equal by the obs.metrics contract; tails stay
+    stats-side, histograms keep only exact count/sum/min/max)."""
     fe = Frontend(eng, FrontendConfig(step_time_s=STEP_TIME_S,
                                       max_queue=4 * DEVICES * SLOTS,
                                       shed=BLOCK))
     events = ({fault_step: [("stage", 0, FAULT_STAGE)]}
               if fault_step is not None else None)
-    t0 = time.perf_counter()
-    comps, stats = fe.run(reqs, events=events)
-    wall = time.perf_counter() - t0
+    with obs_metrics.label_scope(section=section):
+        t0 = time.perf_counter()
+        comps, stats = fe.run(reqs, events=events)
+        wall = time.perf_counter() - t0
     if fault_step is not None:
         eng.recover(0)
     n_tok = sum(len(c.tokens) for c in comps.values())
+    g = obs_report.goodput_summary(obs_metrics.registry().snapshot(),
+                                   section=section)
     return {
-        "goodput_tok_s": round(stats["goodput_tok_s"], 2),
-        "throughput_tok_s": round(stats["throughput_tok_s"], 2),
+        "goodput_tok_s": round(g["goodput_tok_s"], 2),
+        "throughput_tok_s": round(g["throughput_tok_s"], 2),
         "p50_latency_s": round(stats["p50_latency_s"], 4),
         "p99_latency_s": round(stats["p99_latency_s"], 4),
         "p50_ttft_s": round(stats["p50_ttft_s"], 4),
         "p99_ttft_s": round(stats["p99_ttft_s"], 4),
-        "deadline_met": stats["deadline_met"],
-        "completed": stats["completed"],
-        "expired": stats["expired"],
+        "deadline_met": g["deadline_met"],
+        "completed": g["completed"],
+        "expired": g["expired"],
         "requests": len(reqs),
         "requeued": stats["engine"]["requeued"],
-        "virtual_time_s": round(stats["virtual_time_s"], 2),
+        "virtual_time_s": round(g["virtual_time_s"], 2),
         "wall_s": round(wall, 2),
         "wall_us_per_tok": round(1e6 * wall / max(n_tok, 1), 1),
     }
@@ -148,6 +157,8 @@ def closure(cfg, params, seed, *, n=40, failover=RESIDENT):
         max(_window_mean(pst, h_lo, h_hi), 1e-9)
     analytic = _window_mean(cap, f_lo, f_hi) / \
         max(_window_mean(cap, h_lo, h_hi), 1e-9)
+    obs_metrics.set_gauge("closure_ratio", measured, source="measured")
+    obs_metrics.set_gauge("closure_ratio", analytic, source="analytic")
     rel_err = abs(measured - analytic) / max(analytic, 1e-9)
     dropped = [r.rid for r in reqs
                if r.rid not in comps or comps[r.rid].expired]
@@ -171,16 +182,24 @@ def bench(seed: int = 0, *, n: int = 20, closure_n: int = 40):
                         "max_len": MAX_LEN, "requests": n, "seed": seed,
                         "step_time_s": STEP_TIME_S},
            "patterns": {}}
-    for mode in (RECOMPILE, RESIDENT):
-        eng = _engine(cfg, params, mode)   # one engine per mode: the
-        for name, wl, fault_step in _patterns(cfg, n):  # compile caches
-            reqs = wl.build(seed)                       # span patterns
-            cell = out["patterns"].setdefault(name, {})
-            cell[mode] = {
-                "healthy": _run_one(eng, reqs, None),
-                "fault": _run_one(eng, reqs, fault_step),
-            }
-    out["closure"] = closure(cfg, params, seed, n=closure_n)
+    # one bench run = one registry; each cell records under its own
+    # section label, so the snapshot keeps every scenario separable
+    reg = obs_metrics.Registry()
+    with obs_metrics.use(reg):
+        for mode in (RECOMPILE, RESIDENT):
+            eng = _engine(cfg, params, mode)   # one engine per mode: the
+            for name, wl, fault_step in _patterns(cfg, n):  # caches
+                reqs = wl.build(seed)                       # span patterns
+                cell = out["patterns"].setdefault(name, {})
+                cell[mode] = {
+                    "healthy": _run_one(eng, reqs, None,
+                                        section=f"{name}_{mode}_healthy"),
+                    "fault": _run_one(eng, reqs, fault_step,
+                                      section=f"{name}_{mode}_fault"),
+                }
+        with obs_metrics.label_scope(section="closure"):
+            out["closure"] = closure(cfg, params, seed, n=closure_n)
+    out["telemetry"] = {"metrics": reg.snapshot()}
     return out
 
 
@@ -223,9 +242,17 @@ def main(argv=None):
                     help="workload/init RNG seed")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI sizing (same scenario coverage)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the run's metrics snapshot here "
+                         "(readable by python -m repro.obs.report)")
     args = ap.parse_args(argv)
     out = bench(args.seed, n=10 if args.smoke else 20,
                 closure_n=30 if args.smoke else 40)
+    telemetry = out.pop("telemetry")
+    if args.telemetry:
+        with open(args.telemetry, "w") as f:
+            json.dump(telemetry, f, sort_keys=True,
+                      separators=(",", ":"))
     print(json.dumps(out, indent=2))
 
 

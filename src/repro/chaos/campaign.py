@@ -45,6 +45,8 @@ from repro.launch.distributed import (FleetEvent, HostTimeoutError,
                                       HostTopology, KVCoordinator,
                                       fleet_fingerprint, replay_log)
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import (BLOCK, RECOMPILE, RESIDENT, FleetConfig,
                          FleetServeEngine, Frontend, FrontendConfig,
                          LengthModel, Poisson, ServeConfig)
@@ -222,6 +224,7 @@ def serve_campaign(seed: int, *, failover: str = RESIDENT,
     events: Dict[int, List[Tuple]] = {}
     expected: List[Tuple[int, Tuple]] = []
     transients: List[ChaosEvent] = []
+    stalls: List[ChaosEvent] = []
     persistent_keys: set = set()
     armed: set = set()
     try:
@@ -259,6 +262,10 @@ def serve_campaign(seed: int, *, failover: str = RESIDENT,
             elif ev.kind == HOST_LOSS:
                 events.setdefault(ev.step, []).append(("host", ev.host))
                 expected.append((ev.step, ("host", ev.host)))
+            elif ev.kind == COORD_STALL:
+                # drilled after the traffic run (the coordinator is not
+                # on the serve data path); the engine sees nothing
+                stalls.append(ev)
 
         # saturating, deadline-free arrivals: the soak measures survival
         # and capacity accounting, not tails (traffic_bench owns those)
@@ -270,6 +277,10 @@ def serve_campaign(seed: int, *, failover: str = RESIDENT,
         comps, stats = fe.run(reqs, events=events)
     finally:
         lanefault.reset()
+
+    # coordinator-stall drills ride alongside the traffic run, so the
+    # KV-retry spike lands in this campaign's telemetry scope
+    drills = {ev.step: _stall_drill(f"serve-{ev.step}") for ev in stalls}
 
     # ---------------------------------------------------------- metrics
     applied = {(e["step"], tuple(e["event"])) for e in eng.event_log
@@ -289,7 +300,8 @@ def serve_campaign(seed: int, *, failover: str = RESIDENT,
                            and e.get("step") == ev.step)
             mttr = max(attempts, 1) * STEP_TIME_S
         elif ev.kind == COORD_STALL:
-            continue
+            # wall time to the typed HostTimeoutError, not a step count
+            mttr = drills[ev.step]["mttr_s"]
         else:
             nxt = min((e.step for e in schedule if e.step > ev.step),
                       default=len(capacity))
@@ -311,6 +323,14 @@ def serve_campaign(seed: int, *, failover: str = RESIDENT,
          "detail": f"{len(missing)} scheduled event(s) never applied: "
                    f"{missing[:4]}"},
     ]
+    if stalls:
+        bad = [x for d in drills.values() for x in d["details"]]
+        reports.append({"invariant": "coordinator_stall",
+                        "ok": not bad, "n_stalls": len(stalls),
+                        "detail": "; ".join(bad)
+                                  or "typed timeout + isolation"})
+    for m in mttrs:
+        obs_metrics.observe("mttr_seconds", m["mttr_s"])
     return {
         "failover": failover,
         "seed": seed,
@@ -365,6 +385,8 @@ def closure_scenario(seed: int, *, failover: str = RESIDENT,
     f_hi = min(f_lo + 20, int(0.8 * len(pst)))
     measured = window(pst, f_lo, f_hi) / max(window(pst, h_lo, h_hi), 1e-9)
     analytic = window(cap, f_lo, f_hi) / max(window(cap, h_lo, h_hi), 1e-9)
+    obs_metrics.set_gauge("closure_ratio", measured, source="measured")
+    obs_metrics.set_gauge("closure_ratio", analytic, source="analytic")
     report = inv.check_closure(measured, analytic)
     report["dropped"] = inv.check_no_dropped(reqs, comps)["missing"]
     report["ok"] = report["ok"] and not report["dropped"]
@@ -392,6 +414,7 @@ def train_campaign(seed: int, *, n_events: int = 4,
                  if e.kind == TRANSIENT_STAGE}
     poison = {e.step: e.device for e in schedule if e.kind == DEVICE_LOSS}
     host_loss = {e.step: e.host for e in schedule if e.kind == HOST_LOSS}
+    stalls = [e for e in schedule if e.kind == COORD_STALL]
     tcfg = TrainConfig(steps=steps, hw_route=SW, probation_retries=2,
                        ckpt_every=2, ckpt_dir=ckpt_dir)
     r = FleetTrainRunner(
@@ -401,6 +424,7 @@ def train_campaign(seed: int, *, n_events: int = 4,
     params, opt = r.init_state()
     r.run(params, opt, steps=steps, transient=dict(transient),
           poison=dict(poison), host_loss=dict(host_loss))
+    drills = {e.step: _stall_drill(f"train-{e.step}") for e in stalls}
 
     live = fleet_fingerprint(r.fleet)
     healthy = FleetPlan.healthy(4, names, target=tcfg.hw_route, n_spares=1)
@@ -421,6 +445,8 @@ def train_campaign(seed: int, *, n_events: int = 4,
             # rewind cost: re-run from the restored checkpoint step
             rewind = max(ev.step % tcfg.ckpt_every, 1)
             mttr = (rewind + 1) * mean_dt
+        elif ev.kind == COORD_STALL:
+            mttr = drills[ev.step]["mttr_s"]
         else:
             mttr = mean_dt
         mttrs.append({"step": ev.step, "kind": ev.kind,
@@ -442,6 +468,14 @@ def train_campaign(seed: int, *, n_events: int = 4,
             {"invariant": "checkpoint_restored",
              "ok": "checkpoint_restored" in kinds,
              "detail": "host loss did not restore a checkpoint"})
+    if stalls:
+        bad = [x for d in drills.values() for x in d["details"]]
+        reports.append({"invariant": "coordinator_stall",
+                        "ok": not bad, "n_stalls": len(stalls),
+                        "detail": "; ".join(bad)
+                                  or "typed timeout + isolation"})
+    for m in mttrs:
+        obs_metrics.observe("mttr_seconds", m["mttr_s"])
     return {
         "seed": seed,
         "n_events": len(schedule),
@@ -485,6 +519,40 @@ class StallingKVClient:
         self.store.pop(key, None)
 
 
+def _stall_drill(tag, *, max_attempts: int = 4) -> Dict:
+    """One coordinator-stall drill: host 1 never publishes, so the
+    exchange must surface a typed ``HostTimeoutError(1)`` within the
+    bounded retry budget, and after ``mark_dead`` the survivor's next
+    exchange proceeds with ``None`` in the dead slot.  The bounded
+    retries land in ``kv_retries_total`` / ``coord_timeouts_total`` (the
+    KV-retry spike a scheduled ``coord_stall`` makes visible in the
+    campaign snapshot); wall time to the typed error is the MTTR."""
+    client = StallingKVClient(stalled=[1])
+    coord = KVCoordinator(num_hosts=2, host_id=0, client=client,
+                          timeout_ms=2_000, attempt_timeout_ms=10,
+                          max_attempts=max_attempts,
+                          backoff_base_s=0.001)
+    details: List[str] = []
+    t0 = time.perf_counter()
+    try:
+        coord.exchange(f"stall-{tag}")
+        mttr = time.perf_counter() - t0
+        details.append(f"stall {tag}: exchange succeeded unexpectedly")
+    except HostTimeoutError as e:
+        mttr = time.perf_counter() - t0
+        if e.host_id != 1:
+            details.append(f"stall {tag}: wrong host_id {e.host_id}")
+    if client.gets > max_attempts:
+        details.append(f"stall {tag}: {client.gets} gets > budget "
+                       f"{max_attempts}")
+    coord.mark_dead(1)
+    after = coord.exchange(f"post-{tag}")
+    if after[0] != f"post-{tag}" or after[1] is not None:
+        details.append(f"stall {tag}: post-mark_dead exchange {after}")
+    return {"ok": not details, "details": details,
+            "mttr_s": round(mttr, 4), "gets": client.gets}
+
+
 def coordinator_campaign(n_stalls: int = 2, *,
                          max_attempts: int = 4) -> Dict:
     """Coordinator-stall drills: a silent peer must surface as a typed
@@ -492,37 +560,15 @@ def coordinator_campaign(n_stalls: int = 2, *,
     ``mark_dead`` the survivors' exchanges proceed with ``None`` in the
     dead slot."""
     mttrs: List[Dict] = []
-    ok = True
     details: List[str] = []
     for i in range(n_stalls):
-        client = StallingKVClient(stalled=[1])
-        coord = KVCoordinator(num_hosts=2, host_id=0, client=client,
-                              timeout_ms=2_000, attempt_timeout_ms=10,
-                              max_attempts=max_attempts,
-                              backoff_base_s=0.001)
-        t0 = time.perf_counter()
-        try:
-            coord.exchange(f"stall-{i}")
-            ok = False
-            details.append(f"stall {i}: exchange succeeded unexpectedly")
-            continue
-        except HostTimeoutError as e:
-            mttr = time.perf_counter() - t0
-            if e.host_id != 1:
-                ok = False
-                details.append(f"stall {i}: wrong host_id {e.host_id}")
-        if client.gets > max_attempts:
-            ok = False
-            details.append(f"stall {i}: {client.gets} gets > budget "
-                           f"{max_attempts}")
-        coord.mark_dead(1)
-        after = coord.exchange(f"post-{i}")
-        if after[0] != f"post-{i}" or after[1] is not None:
-            ok = False
-            details.append(f"stall {i}: post-mark_dead exchange {after}")
+        d = _stall_drill(i, max_attempts=max_attempts)
+        details += d["details"]
         mttrs.append({"step": i, "kind": COORD_STALL,
-                      "mttr_s": round(mttr, 4)})
-    report = {"invariant": "coordinator_stall", "ok": ok,
+                      "mttr_s": d["mttr_s"]})
+    for m in mttrs:
+        obs_metrics.observe("mttr_seconds", m["mttr_s"])
+    report = {"invariant": "coordinator_stall", "ok": not details,
               "detail": "; ".join(details) or "typed timeout + isolation",
               "n_stalls": n_stalls}
     return {"n_events": n_stalls,
@@ -541,17 +587,28 @@ def run_campaign(seed: int = 0, *, smoke: bool = False,
     train_events = 2 if smoke else 4
     n_stalls = 1 if smoke else 2
     n_requests = 30 if smoke else 60
-    cfg = get_config(ARCH).reduced()
-    params = build_model(cfg).init(jax.random.PRNGKey(seed))
-    serve = {
-        mode: serve_campaign(seed, failover=mode, n_events=serve_events,
-                             n_requests=n_requests, params=params, cfg=cfg)
-        for mode in (RECOMPILE, RESIDENT)
-    }
-    train = train_campaign(seed, n_events=train_events, ckpt_dir=ckpt_dir)
-    coordinator = coordinator_campaign(n_stalls)
-    closure = closure_scenario(seed, n_requests=24 if smoke else 40,
-                               params=params, cfg=cfg)
+    # one campaign = one registry + one tracer: every layer's telemetry
+    # scopes into a single snapshot, sectioned by label_scope
+    reg = obs_metrics.Registry()
+    tracer = obs_trace.Tracer(origin=0)
+    with obs_metrics.use(reg), obs_trace.use(tracer):
+        cfg = get_config(ARCH).reduced()
+        params = build_model(cfg).init(jax.random.PRNGKey(seed))
+        serve = {}
+        for mode in (RECOMPILE, RESIDENT):
+            with obs_metrics.label_scope(section=f"serve_{mode}"):
+                serve[mode] = serve_campaign(
+                    seed, failover=mode, n_events=serve_events,
+                    n_requests=n_requests, params=params, cfg=cfg)
+        with obs_metrics.label_scope(section="train"):
+            train = train_campaign(seed, n_events=train_events,
+                                   ckpt_dir=ckpt_dir)
+        with obs_metrics.label_scope(section="coordinator"):
+            coordinator = coordinator_campaign(n_stalls)
+        with obs_metrics.label_scope(section="closure"):
+            closure = closure_scenario(seed,
+                                       n_requests=24 if smoke else 40,
+                                       params=params, cfg=cfg)
     sections = [serve[RECOMPILE]["invariants"],
                 serve[RESIDENT]["invariants"],
                 train["invariants"], coordinator["invariants"]]
@@ -570,6 +627,8 @@ def run_campaign(seed: int = 0, *, smoke: bool = False,
                        "failed": [f for s in sections
                                   for f in s.get("failed", [])]
                        + ([] if closure["ok"] else ["closure"])},
+        "telemetry": {"metrics": reg.snapshot(),
+                      "trace": [e.to_wire() for e in tracer.events]},
     }
     if raise_on_failure and not all_ok:
         raise inv.InvariantViolation(

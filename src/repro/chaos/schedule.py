@@ -45,12 +45,13 @@ COORD_STALL = "coord_stall"
 ALL_KINDS = (TRANSIENT_STAGE, PERSISTENT_STAGE, LANE_FAULT, DEVICE_LOSS,
              HOST_LOSS, SPARE_EXHAUSTION, COORD_STALL)
 #: kinds a serve-under-traffic campaign can inject (host_loss joins when
-#: the fleet has a topology)
+#: the fleet has a topology); coord_stall fires a coordinator drill
+#: alongside the traffic run — visible as a KV-retry counter spike
 SERVE_KINDS = (TRANSIENT_STAGE, PERSISTENT_STAGE, LANE_FAULT, DEVICE_LOSS,
-               SPARE_EXHAUSTION)
+               SPARE_EXHAUSTION, COORD_STALL)
 #: kinds the data-parallel train loop can inject (stage faults surface as
-#: shard guard trips there -- device-granular)
-TRAIN_KINDS = (TRANSIENT_STAGE, DEVICE_LOSS, HOST_LOSS)
+#: shard guard trips there -- device-granular); coord_stall as above
+TRAIN_KINDS = (TRANSIENT_STAGE, DEVICE_LOSS, HOST_LOSS, COORD_STALL)
 
 
 @dataclass(frozen=True)

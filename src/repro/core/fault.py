@@ -19,7 +19,6 @@ Injection: ``FaultInjector`` corrupts a stage's HW path deterministically
 """
 from __future__ import annotations
 
-import logging
 import time
 from dataclasses import dataclass
 from typing import (Callable, Dict, FrozenSet, Iterable, List, Mapping,
@@ -30,11 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.checksum import checksum_tree
+from repro.obs import metrics
+from repro.obs import trace as obs_trace
+from repro.obs.logging import get_logger
 from repro.viscosity import lanefault
 from repro.viscosity.lang import HW, SW
 from repro.core.stage import Stage
 
-log = logging.getLogger(__name__)
+log = get_logger("core.fault")
 
 OK = "ok"
 FAULT = "fault"
@@ -43,9 +45,12 @@ FAULT = "fault"
 # the stage's canary is re-executed on the same replica under exponential
 # backoff, and the verdict decides which ladder the runtime walks —
 # ``transient_recovered`` restores the HW route, ``persistent`` proceeds
-# HW -> DEGRADED -> SW as before.
+# HW -> DEGRADED -> SW as before.  ``intermittent_promoted`` marks a
+# clean probe overridden by the frequency threshold: the stage kept
+# flapping transient, so it is treated as persistent anyway.
 TRANSIENT_RECOVERED = "transient_recovered"
 PERSISTENT = "persistent"
+INTERMITTENT_PROMOTED = "intermittent_promoted"
 
 # Errors a detector may legitimately *interpret as a fault* when a stage's
 # HW path raises them (numeric/shape breakage of the kind a defective
@@ -113,6 +118,7 @@ class FaultState:
         entry = {"stage": stage, "replica": replica, "kind": kind,
                  **self._stamp(step)}
         self.log.append(entry)
+        metrics.inc("fault_events_total", kind=kind, stage=stage)
         return entry
 
     def note(self, stage: str, replica: int = 0, kind: str = "note",
@@ -122,6 +128,7 @@ class FaultState:
         entry = {"stage": stage, "replica": replica, "kind": kind,
                  **self._stamp(step)}
         self.log.append(entry)
+        metrics.inc("fault_events_total", kind=kind, stage=stage)
         return entry
 
     def observe(self, entry: Mapping) -> dict:
@@ -152,6 +159,7 @@ class FaultState:
         entry = {"stage": stage, "replica": replica, "kind": kind,
                  **self._stamp(step)}
         self.log.append(entry)
+        metrics.inc("fault_events_total", kind=kind, stage=stage)
         return entry
 
     def is_faulty(self, stage: str, replica: int = 0) -> bool:
@@ -229,19 +237,47 @@ class ProbationPolicy:
 
 
 @dataclass(frozen=True)
+class IntermittentPolicy:
+    """Frequency threshold for promoting a *flapping* stage to
+    persistent (ROADMAP chaos headroom; the related work's wear-out
+    model): when one (stage, replica) collects ``threshold`` transient
+    verdicts within the trailing ``window_steps`` engine steps, the next
+    clean probe is overridden — recurring upsets on the same silicon are
+    a defect signature, not noise, and the runtime stops burning
+    probation budget on them."""
+
+    threshold: int = 3
+    window_steps: int = 20
+
+    def __post_init__(self):
+        if self.threshold < 2:
+            raise ValueError(f"threshold must be >= 2, got "
+                             f"{self.threshold}")
+        if self.window_steps < 1:
+            raise ValueError(f"window_steps must be >= 1, got "
+                             f"{self.window_steps}")
+
+
+@dataclass(frozen=True)
 class ProbationResult:
     """Outcome of one probation: ``transient`` when the canary went clean
     within the retry budget (at re-run ``attempts``), else persistent.
-    ``backoff_s`` is the total back-off actually scheduled."""
+    ``promoted`` marks the intermittent override — the probe came back
+    clean but the IntermittentPolicy frequency threshold forced the
+    persistent ladder anyway.  ``backoff_s`` is the total back-off
+    actually scheduled."""
 
     stage: str
     replica: int
     transient: bool
     attempts: int
     backoff_s: float
+    promoted: bool = False
 
     @property
     def verdict(self) -> str:
+        if self.promoted:
+            return INTERMITTENT_PROMOTED
         return TRANSIENT_RECOVERED if self.transient else PERSISTENT
 
 
@@ -261,10 +297,28 @@ class FaultClassifier:
 
     def __init__(self, checker: "CanaryChecker",
                  policy: Optional[ProbationPolicy] = None, *,
+                 intermittent: Optional[IntermittentPolicy] = None,
                  sleep: Optional[Callable[[float], None]] = None):
         self.checker = checker
         self.policy = policy or ProbationPolicy()
+        self.intermittent = intermittent
+        # (stage, replica) -> steps of recent transient verdicts (the
+        # telemetry counter is monotone; the window lives here)
+        self._transients: Dict[Tuple[str, int], List[int]] = {}
         self._sleep = sleep if sleep is not None else time.sleep
+
+    def _flapping(self, stage: str, replica: int, step: int) -> bool:
+        """Record one transient verdict and report whether it crosses
+        the intermittent-promotion frequency threshold."""
+        metrics.inc("probation_transients_total", stage=stage)
+        if self.intermittent is None:
+            return False
+        key = (stage, replica)
+        lo = step - self.intermittent.window_steps
+        recent = [s for s in self._transients.get(key, ()) if s >= lo]
+        recent.append(step)
+        self._transients[key] = recent
+        return len(recent) >= self.intermittent.threshold
 
     def _stage_named(self, name: str) -> Optional[Stage]:
         for s in self.checker.stages:
@@ -290,9 +344,37 @@ class FaultClassifier:
                 state.note(stage, replica,
                            kind="probation_retry", step=step)
             if clean:
+                if self._flapping(stage, replica, step):
+                    # clean probe, but the stage keeps flapping: the
+                    # frequency threshold promotes it to persistent
+                    res = ProbationResult(stage=stage, replica=replica,
+                                          transient=False,
+                                          attempts=attempts,
+                                          backoff_s=waited,
+                                          promoted=True)
+                    metrics.inc("probation_verdicts_total",
+                                verdict=INTERMITTENT_PROMOTED)
+                    obs_trace.emit(step, name="probation", stage=stage,
+                                   replica=replica,
+                                   verdict=INTERMITTENT_PROMOTED)
+                    log.warning("intermittent fault promoted to "
+                                "persistent", stage=stage,
+                                replica=replica, step=step,
+                                window=self.intermittent.window_steps,
+                                threshold=self.intermittent.threshold)
+                    if state is not None:
+                        state.note(stage, replica,
+                                   kind=INTERMITTENT_PROMOTED, step=step)
+                    return res
                 res = ProbationResult(stage=stage, replica=replica,
                                       transient=True, attempts=attempts,
                                       backoff_s=waited)
+                metrics.inc("probation_verdicts_total",
+                            verdict=TRANSIENT_RECOVERED)
+                obs_trace.emit(step, name="probation", stage=stage,
+                               replica=replica,
+                               verdict=TRANSIENT_RECOVERED,
+                               attempts=attempts)
                 if state is not None:
                     state.note(stage, replica,
                                kind=TRANSIENT_RECOVERED, step=step)
@@ -300,6 +382,10 @@ class FaultClassifier:
         res = ProbationResult(stage=stage, replica=replica,
                               transient=False, attempts=attempts,
                               backoff_s=waited)
+        metrics.inc("probation_verdicts_total", verdict=PERSISTENT)
+        obs_trace.emit(step, name="probation", stage=stage,
+                       replica=replica, verdict=PERSISTENT,
+                       attempts=attempts)
         if state is not None:
             state.note(stage, replica, kind=PERSISTENT, step=step)
         return res
@@ -311,8 +397,8 @@ class FaultClassifier:
         the safe direction."""
         s = self._stage_named(stage_name)
         if s is None:
-            log.warning("probation: no canary stage %r; treating the "
-                        "fault as persistent", stage_name)
+            log.warning("probation: no canary stage; treating the "
+                        "fault as persistent", stage=stage_name)
             if state is not None:
                 state.note(stage_name, replica, kind=PERSISTENT, step=step)
             return ProbationResult(stage=stage_name, replica=replica,
@@ -415,8 +501,9 @@ class CanaryChecker:
         except EXPECTED_STAGE_ERRORS as e:
             # Numeric/shape breakage on the HW path is itself the fault
             # signal; anything unexpected re-raises (no fail-open except).
-            log.warning("canary: stage %r raised %s (%s); treating as a "
-                        "fault", stage.name, type(e).__name__, e)
+            log.warning("canary: stage raised; treating as a fault",
+                        stage=stage.name, error=type(e).__name__,
+                        detail=e)
             return False
         if stage.tol == 0.0:
             return bool(checksum_tree(hw_out) == checksum_tree(sw_out))
@@ -436,8 +523,9 @@ class CanaryChecker:
         try:
             hw_out, sw_out = self._run_both(stage)
         except EXPECTED_STAGE_ERRORS as e:
-            log.warning("canary: localize of stage %r raised %s (%s); "
-                        "not lane-shaped", stage.name, type(e).__name__, e)
+            log.warning("canary: localize raised; not lane-shaped",
+                        stage=stage.name, error=type(e).__name__,
+                        detail=e)
             return None
         for a, b in zip(jax.tree_util.tree_leaves(hw_out),
                         jax.tree_util.tree_leaves(sw_out)):

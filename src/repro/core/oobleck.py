@@ -17,6 +17,8 @@ mechanisms, mirroring the paper:
 from __future__ import annotations
 
 import collections
+import hashlib
+import time
 from dataclasses import dataclass
 from typing import Callable, Hashable, List, Optional, Sequence
 
@@ -26,7 +28,14 @@ from repro.core.fault import FaultSignature
 from repro.core.routing import RoutingPlan
 from repro.core.stage import Stage
 from repro.kernels import tuning
+from repro.obs import metrics
 from repro.viscosity.lang import HW, SW
+
+
+def _key_digest(cache_key: Hashable) -> str:
+    """Stable short digest of a compile key — the telemetry label for
+    per-key hit/miss/compile-time without unbounded cardinality."""
+    return hashlib.sha256(repr(cache_key).encode()).hexdigest()[:10]
 
 
 class StagedAccelerator:
@@ -121,12 +130,20 @@ class Dispatcher:
             self._cache.move_to_end(cache_key)
             e = self._cache[cache_key]
             e.n_calls += 1
+            metrics.inc("dispatch_cache_hits_total",
+                        key=_key_digest(cache_key))
             return e.fn
+        metrics.inc("dispatch_cache_misses_total",
+                    key=_key_digest(cache_key))
         # Build AND trace under the plan scope: any kernel traced while
         # this executable compiles looks up tuned block sizes under this
         # plan's key first (degraded plans may carry different tiles).
+        t0 = time.perf_counter()
         with tuning.plan_scope(cache_key):
             fn = tuning.scoped(cache_key, self.build(key))
+        metrics.observe("dispatch_compile_seconds",
+                        time.perf_counter() - t0,
+                        key=_key_digest(cache_key))
         self.compiles += 1
         self._cache[cache_key] = _Entry(fn=fn, n_calls=1)
         if len(self._cache) > self.capacity:

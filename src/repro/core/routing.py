@@ -564,6 +564,24 @@ class FleetPlan:
         return self
 
 
+def rung_occupancy(fleet: "FleetPlan") -> Dict[str, int]:
+    """Degradation-ladder occupancy of a fleet, for the
+    ``fleet_rung_devices`` telemetry gauge: per routing target, the
+    number of serving (device, stage) assignments routed there, plus
+    device-granular ``quarantined`` / ``spare`` counts.  Standard rungs
+    are always present (zeroed) so gauge updates overwrite stale
+    values."""
+    occ: Dict[str, int] = {t: 0 for t in
+                           (HW, INTERPRET, SW) + DEGRADED_TARGETS}
+    for d in fleet.serving():
+        plan = fleet.plans[d]
+        for _stage, target in plan.assignments:
+            occ[target] = occ.get(target, 0) + 1
+    occ["quarantined"] = len(fleet.quarantined)
+    occ["spare"] = len(fleet.pool.free())
+    return occ
+
+
 def as_routes(routes) -> Any:
     """Normalize a build_model ``routes`` argument.
 

@@ -39,7 +39,6 @@ from __future__ import annotations
 
 import hashlib
 import json
-import logging
 import random
 import time
 from dataclasses import dataclass
@@ -48,9 +47,11 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.core.routing import FleetPlan
 from repro.launch.mesh import FleetMeshView, _mesh
 from repro.launch.sharding import shard_bounds
+from repro.obs import metrics as obs_metrics
+from repro.obs.logging import get_logger, set_host
 from repro.viscosity.lang import HW, SW
 
-log = logging.getLogger(__name__)
+log = get_logger("launch.distributed")
 
 # Event kinds, mirroring the FleetPlan transitions (plus host loss, which
 # expands to one with_host_fault transition over the host's device block).
@@ -103,6 +104,7 @@ def initialize_runtime(
 
     import jax
 
+    set_host(process_id)
     if num_processes <= 1 and coordinator_address is None:
         return DistributedRuntime(num_processes=1, process_id=0)
     if cpu_collectives is not None:
@@ -600,6 +602,9 @@ class KVCoordinator:
                 return self._client.blocking_key_value_get(f"{key}/{peer}", budget)
             except coordination_client_errors() as e:
                 last = e
+                obs_metrics.inc("kv_retries_total", op="get")
+                obs_metrics.set_gauge("coord_attempt_timeout_seconds",
+                                      budget / 1000.0, host=str(peer))
                 if attempt + 1 >= self._max_attempts:
                     break
                 backoff = min(
@@ -608,6 +613,9 @@ class KVCoordinator:
                 )
                 if backoff > 0:
                     time.sleep(backoff * (0.5 + rng.random()))
+        obs_metrics.inc("coord_timeouts_total", host=str(peer))
+        log.warning("host_timeout", host=peer, round=round_idx,
+                    attempts=attempts)
         raise HostTimeoutError(
             peer,
             f"host {peer} did not publish round {round_idx} within "
@@ -642,11 +650,7 @@ class KVCoordinator:
                     f"{self._namespace}/x{r - 2}/{self.host_id}"
                 )
             except coordination_client_errors() as e:
-                log.debug(
-                    "coordination-service GC of round %d key failed: %s",
-                    r - 2,
-                    e,
-                )
+                log.debug("kv_gc_failed", round=r - 2, error=str(e))
         return out
 
 

@@ -21,6 +21,7 @@ Results are cached as JSON under artifacts/dryrun/.
 """
 import argparse
 import json
+import sys
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -40,6 +41,9 @@ from repro.launch.partition import (batch_pspec, make_cache_pspec_fn,
                                     params_pspecs, rules_for, tree_pspecs)
 from repro.launch.sharding import axis_rules
 from repro.models import build_model, input_specs, params_specs
+from repro.obs.logging import configure as obs_configure, get_logger
+
+log = get_logger("launch.dryrun")
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "artifacts", "dryrun")
@@ -396,6 +400,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def main():
+    obs_configure(stream=sys.stdout)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -423,13 +428,14 @@ def main():
         n_skip += rec["status"] == "skip"
         n_fail += rec["status"] == "fail"
         dom = rec.get("roofline", {}).get("dominant", "-")
-        print(f"[{i+1}/{len(cells)}] {arch} {shape} "
-              f"{'multi' if mp else 'single'}: {rec['status']} "
-              f"({rec['wall_s']}s) dom={dom}", flush=True)
+        log.info("cell", i=f"{i + 1}/{len(cells)}", arch=arch,
+                 shape=shape, mesh="multi" if mp else "single",
+                 status=rec["status"], wall_s=rec["wall_s"], dom=dom)
         if rec["status"] == "fail":
-            print("   ", rec["error"][:300], flush=True)
-    print(f"done in {time.time()-t0:.0f}s: ok={n_ok} skip={n_skip} "
-          f"fail={n_fail}", flush=True)
+            log.error("cell_failed", arch=arch, shape=shape,
+                      error=rec["error"][:300])
+    log.info("done", wall_s=round(time.time() - t0), ok=n_ok,
+             skip=n_skip, fail=n_fail)
     if n_fail:
         raise SystemExit(1)
 

@@ -16,9 +16,13 @@ time; this runner stays the whole-program (roofline-level) instance.
 import argparse
 import contextlib
 import dataclasses
+import sys
 
 from repro.launch import dryrun
 from repro.launch.variants import VARIANTS, variant_mesh
+from repro.obs.logging import configure as obs_configure, get_logger
+
+log = get_logger("launch.hillclimb")
 
 
 @contextlib.contextmanager
@@ -76,16 +80,17 @@ def compare(base, var, label):
                     f"({(w/b - 1)*100 if b else 0:+.1f}%)")
     bf = base["roofline"]["roofline_fraction"]
     wf = var["roofline"]["roofline_fraction"]
-    print(f"== {label}")
-    print("\n".join(rows))
-    print(f"  roofline_frac  {bf:.4f} -> {wf:.4f} "
-          f"({(wf/bf if bf else 0):.2f}x)")
-    print(f"  dominant       {base['roofline']['dominant']} -> "
-          f"{var['roofline']['dominant']}")
+    sys.stdout.write("\n".join(
+        [f"== {label}"] + rows +
+        [f"  roofline_frac  {bf:.4f} -> {wf:.4f} "
+         f"({(wf/bf if bf else 0):.2f}x)",
+         f"  dominant       {base['roofline']['dominant']} -> "
+         f"{var['roofline']['dominant']}"]) + "\n")
     return wf, bf
 
 
 def main():
+    obs_configure(stream=sys.stdout)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
@@ -102,7 +107,8 @@ def main():
                       multi_pod=args.multi, microbatch=args.microbatch,
                       force=args.force)
     if var["status"] != "ok":
-        print(var.get("error"), "\n", var.get("trace", "")[-2000:])
+        log.error("variant_failed", error=var.get("error"),
+                  trace=var.get("trace", "")[-2000:])
         raise SystemExit(1)
     compare(base, var, f"{args.arch}/{args.shape} + {args.variant}")
 

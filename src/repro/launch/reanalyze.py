@@ -11,10 +11,15 @@ import gzip
 import json
 import os
 
+import sys
+
 from repro.configs import get_config
 from repro.launch import hlo_analysis
 from repro.launch.dryrun import ART_DIR, roofline_terms
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.obs.logging import configure as obs_configure, get_logger
+
+log = get_logger("launch.reanalyze")
 
 
 def reanalyze_one(json_path: str, hlo_path: str) -> bool:
@@ -53,6 +58,7 @@ def reanalyze_one(json_path: str, hlo_path: str) -> bool:
 
 
 def main():
+    obs_configure(stream=sys.stdout)
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
     args = ap.parse_args()
@@ -65,8 +71,8 @@ def main():
         hp = os.path.join(hlo_dir, base + ".txt.gz")
         if reanalyze_one(jp, hp):
             n += 1
-            print("reanalyzed", base, flush=True)
-    print(f"done: {n} cells")
+            log.info("reanalyzed", cell=base)
+    log.info("done", cells=n)
 
 
 if __name__ == "__main__":

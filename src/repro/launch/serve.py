@@ -10,6 +10,7 @@ single-request reference decode.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -17,12 +18,16 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import build_model
+from repro.obs.logging import configure as obs_configure, get_logger
 from repro.serve import (RECOMPILE, RESIDENT, ServeConfig, ServeEngine,
                          percentile, reference_decode, synthetic_workload)
 from repro.viscosity import HW, INTERPRET, SW
 
+log = get_logger("launch.serve")
+
 
 def main():
+    obs_configure(stream=sys.stdout)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b", choices=list(ARCH_NAMES))
     ap.add_argument("--requests", type=int, default=16)
@@ -68,13 +73,15 @@ def main():
     dt = time.perf_counter() - t0
     n_tok = sum(len(c.tokens) for c in done.values())
     lat = [c.latency_s for c in done.values()]
-    print(f"{len(done)}/{len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s), engine steps {stats['steps']}, "
-          f"mean occupancy "
-          f"{np.mean(stats['occupancy']) if stats['occupancy'] else 0:.2f}")
-    print(f"failover={args.failover}, recompiles={stats['recompiles']}, "
-          f"p50 latency {percentile(lat, 0.50)*1e3:.0f}ms, "
-          f"p99 {percentile(lat, 0.99)*1e3:.0f}ms")
+    log.info("served", requests=f"{len(done)}/{len(reqs)}", tokens=n_tok,
+             wall_s=round(dt, 2), tok_s=round(n_tok / dt, 1),
+             steps=stats["steps"],
+             occupancy=round(float(np.mean(stats["occupancy"]))
+                             if stats["occupancy"] else 0.0, 2))
+    log.info("latency", failover=args.failover,
+             recompiles=stats["recompiles"],
+             p50_ms=round(percentile(lat, 0.50) * 1e3),
+             p99_ms=round(percentile(lat, 0.99) * 1e3))
     if args.verify:
         if args.hw_route != SW:
             raise SystemExit(
@@ -87,8 +94,8 @@ def main():
             if not np.array_equal(done[r.rid].tokens, ref):
                 raise SystemExit(f"request {r.rid}: tokens diverge from "
                                  f"reference decode")
-        print(f"verified: all {len(reqs)} completions bit-identical to "
-              f"single-request reference decode")
+        log.info("verified", requests=len(reqs),
+                 detail="bit-identical-to-reference-decode")
 
 
 if __name__ == "__main__":

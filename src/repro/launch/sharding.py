@@ -11,14 +11,15 @@ EXPERIMENTS.md §Perf mostly edit this table, not the model code.
 from __future__ import annotations
 
 import contextlib
-import logging
 import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-log = logging.getLogger(__name__)
+from repro.obs.logging import get_logger
+
+log = get_logger("launch.sharding")
 
 Axis = Union[None, str, Tuple[str, ...]]
 
@@ -89,8 +90,8 @@ def constrain(x, *names: Optional[str]):
         # Shape/axis mismatch inside exotic paths: stay unsharded.  Only
         # the expected spec errors are swallowed (and logged) — anything
         # else is a real bug and propagates.
-        log.debug("constrain(%s): %s (%s); leaving unsharded",
-                  names, type(e).__name__, e)
+        log.debug("constrain_unsharded", names=names,
+                  error=type(e).__name__, detail=str(e))
         return x
 
 

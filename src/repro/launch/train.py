@@ -9,15 +9,20 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 from repro import optim
 from repro.configs import ARCH_NAMES, get_config
 from repro.data import DataConfig, SyntheticLM
+from repro.obs.logging import configure as obs_configure, get_logger
 from repro.train import TrainConfig, TrainRunner
 from repro.viscosity import HW, INTERPRET, SW
 
+log = get_logger("launch.train")
+
 
 def main():
+    obs_configure(stream=sys.stdout)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b", choices=list(ARCH_NAMES))
     ap.add_argument("--steps", type=int, default=200)
@@ -51,20 +56,21 @@ def main():
     runner = TrainRunner(cfg, ocfg, tcfg, data)
     params, opt_state, err = runner.init_state()
 
-    def log(step, row):
+    def on_step(step, row):
         if step % 10 == 0:
-            print(f"step {step:5d} loss {row['loss']:.4f} "
-                  f"gnorm {row['grad_norm']:.2f} dt {row['dt']*1e3:.0f}ms "
-                  f"faults {row['n_faults']} compiles {row['compiles']}",
-                  flush=True)
+            log.info("step", step=step, loss=round(row["loss"], 4),
+                     gnorm=round(row["grad_norm"], 2),
+                     dt_ms=round(row["dt"] * 1e3),
+                     faults=row["n_faults"], compiles=row["compiles"])
         if args.inject_fault_at == step:
-            print(f"!! injecting fault into {args.inject_stage}", flush=True)
+            log.warning("injecting_fault", stage=args.inject_stage)
             runner.inject_fault(args.inject_stage)
 
-    runner.run(params, opt_state, err, on_step=log)
-    print(json.dumps({"final_loss": runner.history[-1]["loss"],
-                      "compiles": runner.dispatcher.compiles,
-                      "fault_log": runner.fault_state.log}, default=str))
+    runner.run(params, opt_state, err, on_step=on_step)
+    sys.stdout.write(json.dumps(
+        {"final_loss": runner.history[-1]["loss"],
+         "compiles": runner.dispatcher.compiles,
+         "fault_log": runner.fault_state.log}, default=str) + "\n")
 
 
 if __name__ == "__main__":

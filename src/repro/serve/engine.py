@@ -67,10 +67,12 @@ from repro.configs.base import ModelConfig
 from repro.core.datacenter import DegradationModel
 from repro.core.fault import FaultState
 from repro.core.oobleck import Dispatcher
-from repro.core.routing import FleetPlan, RoutingPlan
+from repro.core.routing import FleetPlan, RoutingPlan, rung_occupancy
 from repro.launch.distributed import EventChannel, HostTimeoutError, \
     HostTopology, fleet_fingerprint
 from repro.models import build_model
+from repro.obs import metrics
+from repro.obs import trace as obs_trace
 from repro.train.runner import model_stage_names
 from repro.viscosity import REGISTRY, SW, lanefault
 
@@ -474,6 +476,7 @@ class ServeEngine(_SlotPool):
         nxt = jnp.argmax(logits[:, 0, -1], -1).astype(jnp.int32)      # (S,)
         nxt.block_until_ready()
         dt = time.perf_counter() - t0
+        metrics.observe("serve_decode_tick_seconds", dt)
         self._toks = nxt[:, None, None]
         S = self.scfg.max_slots
         active_mask = np.zeros((S,), np.int32)
@@ -740,6 +743,8 @@ class FleetServeEngine:
                     plan=self.fleet.plans[d])
             else:
                 w.capacity = 0
+        for rung, n in rung_occupancy(self.fleet).items():
+            metrics.set_gauge("fleet_rung_devices", n, rung=rung)
 
     def _apply(self, event: Tuple, step: int, *,
                strict: bool = True) -> List[Request]:
@@ -803,6 +808,10 @@ class FleetServeEngine:
             drained.extend(self.workers[d].drain())
         self.event_log.append({"step": step, "event": event,
                                "drained": len(drained)})
+        obs_trace.emit(step, name=f"fleet:{kind}", device=device,
+                       stage=event[2] if kind in ("stage", "recover")
+                       and len(event) > 2 else "",
+                       drained=len(drained))
         self._sync_capacity()
         return drained
 

@@ -34,6 +34,8 @@ from typing import (Any, Dict, List, Mapping, Optional, Sequence,
 
 import numpy as np
 
+from repro.obs import metrics
+from repro.obs import trace as obs_trace
 from repro.serve.engine import (Completion, FleetServeEngine, Request,
                                 percentile, validate_requests)
 
@@ -144,6 +146,12 @@ class Frontend:
 
         def shed(r: Request, clock: float, kind: str):
             stats[kind].append(r.rid)
+            if kind == "shed":
+                metrics.inc("serve_shed_total")
+            else:
+                metrics.inc("serve_evicted_total",
+                            where=kind.replace("expired_", ""))
+            obs_trace.emit(int(round(clock / dt)), name=kind, rid=r.rid)
             completions[r.rid] = Completion(
                 rid=r.rid, tokens=np.asarray((), np.int32),
                 prompt_len=len(r.prompt), arrival=r.arrival,
@@ -183,6 +191,7 @@ class Frontend:
                     continue
                 r = pending.pop(0)
                 stats["released"] += 1
+                metrics.inc("serve_released_total")
                 queue.append(r)
             # ---- deadline expiry (queued, then in-flight) ---------
             if cfg.expire:
@@ -196,6 +205,10 @@ class Frontend:
                     if d is not None and clock > d:
                         sess.cancel(rid)   # frees the slot this step
                         stats["expired_in_flight"].append(rid)
+                        metrics.inc("serve_evicted_total",
+                                    where="in_flight")
+                        obs_trace.emit(step, kind=obs_trace.SPAN_END,
+                                       name=f"req:{rid}", expired=True)
                         live.discard(rid)
             # ---- EDF admission into free engine slots -------------
             if cfg.order == EDF:
@@ -209,8 +222,13 @@ class Frontend:
                             _validated=True)
                 live.add(r.rid)
                 stats["submitted"] += 1
+                metrics.inc("serve_admitted_total")
+                obs_trace.emit(step, kind=obs_trace.SPAN_START,
+                               name=f"req:{r.rid}",
+                               prompt_len=len(r.prompt))
             del queue[:k]
             stats["queue_depth"].append(len(queue))
+            metrics.set_gauge("serve_queue_depth", len(queue))
             # ---- one engine tick ----------------------------------
             if is_fleet:
                 sess.step(events.pop(step, ()))
@@ -219,6 +237,9 @@ class Frontend:
             for c in sess.poll():
                 completions[c.rid] = c
                 live.discard(c.rid)
+                obs_trace.emit(step, kind=obs_trace.SPAN_END,
+                               name=f"req:{c.rid}",
+                               tokens=len(c.tokens))
             step += 1
             if step > cfg.max_steps:
                 raise RuntimeError(
@@ -235,6 +256,7 @@ class Frontend:
         stats["steps"] = step
         stats["engine"] = engine_stats
         stats.update(summarize(completions, step * dt))
+        metrics.set_gauge("serve_virtual_time_seconds", step * dt)
         return completions, stats
 
     # ------------------------------------------------- virtual stamps
@@ -268,6 +290,20 @@ def summarize(completions: Mapping[int, Completion],
     lat = sorted(c.latency_s for c in good)
     ttft = sorted(c.ttft_s for c in good)
     span = max(virtual_time_s, 1e-9)
+    # Telemetry mirror: obs.report.goodput_summary reproduces the
+    # goodput/throughput values below exactly from these counters (same
+    # integer token sums, same division by the virtual-time gauge).
+    metrics.inc("serve_completed_total", len(done))
+    metrics.inc("serve_deadline_met_total", len(good))
+    metrics.inc("serve_expired_total",
+                sum(c.expired for c in completions.values()))
+    metrics.inc("serve_goodput_tokens_total",
+                sum(len(c.tokens) for c in good))
+    metrics.inc("serve_tokens_total",
+                sum(len(c.tokens) for c in completions.values()))
+    for c in good:
+        metrics.observe("serve_latency_seconds", c.latency_s)
+        metrics.observe("serve_ttft_seconds", c.ttft_s)
     return {
         "completed": len(done),
         "deadline_met": len(good),

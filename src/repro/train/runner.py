@@ -39,6 +39,7 @@ from repro.launch.distributed import (FleetEvent, HostTopology, HostView,
                                       fleet_fingerprint)
 from repro.launch.sharding import shard_bounds
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
 from repro.viscosity import INTERPRET, REGISTRY, SW, lanefault
 
 PyTree = Any
@@ -192,6 +193,7 @@ class TrainRunner:
             new = fn(params, opt_state, err, batch)
             new[-1]["loss"].block_until_ready()
             dt = time.perf_counter() - t0
+            obs_metrics.observe("train_step_seconds", dt)
             self.watchdog.record(0, dt)
             params2, opt2, err2, metrics = new
             if not StepGuard.ok({"loss": metrics["loss"],
@@ -210,7 +212,10 @@ class TrainRunner:
                         "opt": jax.tree_util.tree_map(
                         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                         opt_state)}
+                    r0 = time.perf_counter()
                     restored = self.ckpt.restore(s, like)
+                    obs_metrics.observe("ckpt_restore_seconds",
+                                        time.perf_counter() - r0)
                     params, opt_state = restored["params"], restored["opt"]
                     # inputs of the failed call were donated; rebuild err
                     err = (optim.init_error(params)
@@ -245,9 +250,12 @@ class TrainRunner:
                         if res.transient:
                             self.fault_state.clear(name, step=step_i)
             if self.ckpt and (step_i + 1) % tcfg.ckpt_every == 0:
+                s0 = time.perf_counter()
                 self.ckpt.save_async(step_i + 1,
                                      {"params": params, "opt": opt_state},
                                      extra={"data_step": step_i + 1})
+                obs_metrics.observe("ckpt_save_seconds",
+                                    time.perf_counter() - s0)
                 last_good = step_i + 1
             step_i += 1
         if self.ckpt:
@@ -434,7 +442,10 @@ class FleetTrainRunner:
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
             "opt": jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt_state)}
+        r0 = time.perf_counter()
         restored = self.ckpt.restore(s, like)
+        obs_metrics.observe("ckpt_restore_seconds",
+                            time.perf_counter() - r0)
         self.fault_state.note("<ckpt>", kind="checkpoint_restored",
                               step=step_i)
         return restored["params"], restored["opt"], s
@@ -493,9 +504,11 @@ class FleetTrainRunner:
                 self._log_event(step_i, "device", tripped)
                 continue
             params, opt_state, om = self._update(grads, opt_state, params)
+            fleet_dt = time.perf_counter() - t0
+            obs_metrics.observe("train_step_seconds", fleet_dt)
             row = {
                 "step": step_i, "loss": metrics["loss"],
-                "dt": time.perf_counter() - t0,
+                "dt": fleet_dt,
                 "n_serving": len(self.fleet.serving()),
                 "n_quarantined": len(self.fleet.quarantined),
                 "compiles": self.dispatcher.compiles}
@@ -504,10 +517,13 @@ class FleetTrainRunner:
             self.history.append(row)
             step_i += 1
             if self.ckpt and step_i % self.tcfg.ckpt_every == 0:
+                s0 = time.perf_counter()
                 self.ckpt.save_async(
                     step_i, {"params": params, "opt": opt_state},
                     extra={"data_step": step_i,
                            "fingerprint": fleet_fingerprint(self.fleet)})
+                obs_metrics.observe("ckpt_save_seconds",
+                                    time.perf_counter() - s0)
         if self.ckpt:
             self.ckpt.wait()
         return params, opt_state

@@ -21,10 +21,15 @@ from repro.chaos import (DEVICE_LOSS, LANE_FAULT, PERSISTENT_STAGE,
 from repro.chaos.campaign import (ChaosCanary, StallingKVClient,
                                   closure_scenario, coordinator_campaign,
                                   serve_campaign, train_campaign)
-from repro.chaos.schedule import horizon_of
+from repro.chaos.schedule import COORD_STALL, SERVE_KINDS, TRAIN_KINDS, \
+    horizon_of
 from repro.configs import get_config
-from repro.core.fault import (PERSISTENT, TRANSIENT_RECOVERED,
-                              FaultClassifier, FaultState, ProbationPolicy)
+from repro.core.fault import (INTERMITTENT_PROMOTED, PERSISTENT,
+                              TRANSIENT_RECOVERED, FaultClassifier,
+                              FaultState, IntermittentPolicy,
+                              ProbationPolicy)
+from repro.obs import metrics as obs_metrics
+from repro.obs import report as obs_report
 from repro.core.routing import FleetPlan
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.distributed import (FleetEvent, HostTimeoutError,
@@ -182,6 +187,71 @@ def test_probation_transient_and_persistent_verdicts():
     assert waits == []                             # zero-base never sleeps
 
 
+def test_intermittent_flapping_promoted_to_persistent():
+    """A (stage, replica) that keeps earning transient verdicts inside
+    the frequency window gets its next clean probe overridden to
+    persistent (wear-out signature), with the promotion in the fault
+    log; a different replica on the same stage is unaffected."""
+    clf = FaultClassifier(None, ProbationPolicy(retries=3,
+                                                backoff_base_s=0.0),
+                          sleep=lambda _s: None,
+                          intermittent=IntermittentPolicy(threshold=2,
+                                                          window_steps=5))
+    state = FaultState()
+    res = clf.probate(lambda: True, stage="x", replica=1, step=0,
+                      state=state)
+    assert res.transient and res.verdict == TRANSIENT_RECOVERED
+    res = clf.probate(lambda: True, stage="x", replica=1, step=3,
+                      state=state)
+    assert not res.transient and res.verdict == INTERMITTENT_PROMOTED
+    assert INTERMITTENT_PROMOTED in [e["kind"] for e in state.log]
+    # other replicas keep their own window
+    res = clf.probate(lambda: True, stage="x", replica=2, step=3,
+                      state=state)
+    assert res.transient
+
+
+def test_intermittent_window_expires():
+    """Transient verdicts outside the trailing window do not count
+    toward promotion — sparse upsets stay transient."""
+    clf = FaultClassifier(None, ProbationPolicy(retries=3,
+                                                backoff_base_s=0.0),
+                          sleep=lambda _s: None,
+                          intermittent=IntermittentPolicy(threshold=2,
+                                                          window_steps=3))
+    for step in (0, 10, 20):
+        res = clf.probate(lambda: True, stage="x", replica=0, step=step)
+        assert res.transient, step
+
+
+def test_intermittent_promotion_under_chaos_schedule():
+    """Chaos-schedule shape: repeated transient upsets on one stage
+    within the window promote on the threshold'th episode, and the
+    verdict counters land in telemetry."""
+    pol = IntermittentPolicy(threshold=3, window_steps=10)
+    clf = FaultClassifier(None, ProbationPolicy(retries=2,
+                                                backoff_base_s=0.0),
+                          sleep=lambda _s: None, intermittent=pol)
+    sched = [ChaosEvent(step=s, kind=TRANSIENT_STAGE, device=0,
+                        stage="flash_attention") for s in (2, 5, 8)]
+    reg = obs_metrics.Registry()
+    verdicts = []
+    with obs_metrics.use(reg):
+        for ev in sched:
+            res = clf.probate(lambda: True, stage=ev.stage,
+                              replica=ev.device, step=ev.step)
+            verdicts.append(res.verdict)
+    assert verdicts == [TRANSIENT_RECOVERED, TRANSIENT_RECOVERED,
+                        INTERMITTENT_PROMOTED]
+    snap = reg.snapshot()
+    assert obs_report.counter_value(
+        snap, "probation_verdicts_total",
+        verdict=INTERMITTENT_PROMOTED) == 1
+    assert obs_report.counter_value(
+        snap, "probation_transients_total",
+        stage="flash_attention") == 3
+
+
 def test_probation_backoff_schedule_capped():
     pol = ProbationPolicy(retries=4, backoff_base_s=0.25,
                           backoff_factor=2.0, max_backoff_s=0.6)
@@ -256,13 +326,36 @@ def test_fleet_train_ckpt_cadence_and_host_restore(setup, tmp_path):
 
 # ------------------------------------------------------ campaign smokes
 def test_serve_campaign_smoke_invariants_green(setup):
+    """Invariants green at small sizing, and the run's telemetry
+    snapshot reproduces the campaign's own MTTR/goodput summaries
+    exactly (the obs.metrics exact-stats contract).  Seed 2's schedule
+    draws a coord_stall, so the drill's bounded KV retries must show as
+    a counter spike in the same snapshot."""
     cfg, params = setup
-    r = serve_campaign(2, n_events=2, n_requests=10, params=params,
-                       cfg=cfg)
+    reg = obs_metrics.Registry()
+    with obs_metrics.use(reg), \
+            obs_metrics.label_scope(section="serve_resident"):
+        r = serve_campaign(2, n_events=2, n_requests=10, params=params,
+                           cfg=cfg)
     assert r["invariants"]["ok"], r["invariants"]["reports"]
     assert r["traffic"]["completed"] == r["traffic"]["requests"]
     assert r["mttr_summary"]["n"] == r["n_events"]
     assert lanefault.injection("flash_attention") is None  # cleaned up
+
+    snap = reg.snapshot()
+    assert obs_report.mttr_summary(snap, section="serve_resident") \
+        == r["mttr_summary"]
+    g = obs_report.goodput_summary(snap, section="serve_resident")
+    assert g["completed"] == r["traffic"]["completed"]
+    assert g["expired"] == r["traffic"]["expired"]
+    assert round(g["throughput_tok_s"], 2) == \
+        r["traffic"]["throughput_tok_s"]
+    assert round(g["virtual_time_s"], 2) == r["traffic"]["virtual_time_s"]
+    # the scheduled coord_stall surfaced as bounded KV retries
+    assert any(e["kind"] == COORD_STALL for e in r["schedule"])
+    assert obs_report.counter_value(snap, "kv_retries_total", op="get") > 0
+    assert obs_report.counter_value(snap, "coord_timeouts_total",
+                                    host="1") > 0
 
 
 def test_train_campaign_smoke_invariants_green(tmp_path):
